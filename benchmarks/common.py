@@ -1,0 +1,76 @@
+"""Shared helpers for the paper-table benchmarks (CPU-scale analogs)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, optim
+from repro.configs.base import ShapeConfig
+from repro.core import lightweight
+from repro.data.pipeline import SyntheticCLS
+from repro.models import model as M
+from repro.models import transformer
+from repro.train.steps import TrainState, make_cls_loss, make_train_step
+
+
+def time_call(fn, *args, reps: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call in microseconds (jit'd fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def finetune_cls(arch: str, *, mode: str = "lfa", mpo: bool = True,
+                 steps: int = 80, seq_len: int = 32, batch: int = 16,
+                 lr: float = 2e-3, seed: int = 0, params=None,
+                 trainable_mask=None, cfg=None):
+    """Fine-tune a smoke-scale classifier on the GLUE-analog task.
+
+    Returns (final params, eval accuracy, trainable count, total count, cfg).
+    """
+    import dataclasses
+    if cfg is None:
+        cfg = configs.smoke_config(arch, num_classes=2)
+        if not mpo:
+            cfg = dataclasses.replace(
+                cfg, mpo=dataclasses.replace(cfg.mpo, enabled=False))
+    model = M.build(cfg)
+    if params is None:
+        params, _ = model.init_params(jax.random.PRNGKey(seed))
+    mask = (trainable_mask if trainable_mask is not None
+            else lightweight.trainable_mask(params, mode=mode))
+    tr, tot = lightweight.count_trainable(params, mask)
+    opt = optim.adamw(lr, mask=mask)
+    state = TrainState(params, opt.init(params))
+    loss_fn = make_cls_loss(cfg)
+    step = jax.jit(make_train_step(model, opt, loss_fn=loss_fn))
+    ds = SyntheticCLS(cfg.vocab_size, seq_len, batch, seed=seed)
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        state, metrics = step(state, b)
+    # eval on held-out steps
+    accs = []
+    eval_fn = jax.jit(lambda p, b: make_cls_loss(cfg)(p, b)[1]["acc"])
+    for i in range(1000, 1010):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        accs.append(float(eval_fn(state.params, b)))
+    return state.params, float(np.mean(accs)), tr, tot, cfg
+
+
+def eval_cls(cfg, params, *, seq_len=32, batch=16, seed=0):
+    ds = SyntheticCLS(cfg.vocab_size, seq_len, batch, seed=seed)
+    eval_fn = jax.jit(lambda p, b: make_cls_loss(cfg)(p, b)[1]["acc"])
+    accs = []
+    for i in range(1000, 1010):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        accs.append(float(eval_fn(params, b)))
+    return float(np.mean(accs))

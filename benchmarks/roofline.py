@@ -1,0 +1,47 @@
+"""Roofline table generator: reads the dry-run JSONL and emits EXPERIMENTS
+§Roofline rows (per arch x shape x mesh: three terms, dominant bottleneck,
+useful-FLOPs ratio, roofline fraction)."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.roofline import roofline
+
+
+def load(path: str = "results_dryrun.jsonl") -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"])
+            recs[key] = r  # last record wins (re-runs overwrite)
+    return [r for r in recs.values() if "error" not in r]
+
+
+def table(recs: list[dict]) -> list[str]:
+    rows = ["arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+            "useful_ratio,roofline_frac,roofline_frac_dense"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        a = roofline(r)
+        rows.append(
+            f"{a['arch']},{a['shape']},{a['mesh']},"
+            f"{a['compute_s']:.4g},{a['memory_s']:.4g},"
+            f"{a['collective_s']:.4g},{a['dominant']},"
+            f"{a['useful_flops_ratio']:.3f},{a['roofline_fraction']:.3f},"
+            f"{a['roofline_fraction_dense_equiv']:.3f}")
+    return rows
+
+
+def run() -> list[str]:
+    try:
+        recs = load()
+    except FileNotFoundError:
+        return ["roofline,SKIPPED (run `python -m repro.launch.dryrun --all"
+                " --both-meshes --out results_dryrun.jsonl` first)"]
+    return table(recs)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,39 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [table1 table2 ...]``
+Prints ``name,metric,...`` CSV rows per the assignment contract.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_lowrank, roofline, table1_variation,
+                            table2_complexity, table3_glue_analog,
+                            table4_variants, table5_last_layers)
+    suites = {
+        "table1": table1_variation.run,
+        "table2": table2_complexity.run,
+        "table3": table3_glue_analog.run,
+        "table4": table4_variants.run,
+        "table5": table5_last_layers.run,
+        "fig2": fig2_lowrank.run,
+        "roofline": roofline.run,
+    }
+    want = sys.argv[1:] or list(suites)
+    for name in want:
+        t0 = time.time()
+        try:
+            rows = suites[name]()
+        except Exception as e:  # pragma: no cover
+            rows = [f"{name},ERROR,{type(e).__name__}: {e}"]
+        for r in rows:
+            print(r)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 4 analog: MPOP applied to other BERT variants.
+
+bert (12L), a distilled-depth variant (6L, DistilBERT-analog) and a
+bottleneck-width variant (MobileBERT-analog).  For each: dense full-FT
+baseline vs MPO+LFA — accuracy and #Pr/#To."""
+
+from __future__ import annotations
+
+from benchmarks.common import finetune_cls
+
+STEPS = 60
+
+VARIANTS = {
+    "bert": {},
+    "distil_analog": {"num_layers": 1},        # reduced depth (smoke is 2L)
+    "mobile_analog": {"d_model": 32, "d_ff": 64, "num_heads": 2,
+                      "num_kv_heads": 2, "head_dim": 16},
+}
+
+
+def run() -> list[str]:
+    rows = []
+    for name, overrides in VARIANTS.items():
+        import dataclasses
+        from repro import configs
+        base_cfg = configs.smoke_config("bert-base", num_classes=2,
+                                        **overrides)
+        dense_cfg = dataclasses.replace(
+            base_cfg, mpo=dataclasses.replace(base_cfg.mpo, enabled=False))
+        _, acc_d, tr_d, tot_d, _ = finetune_cls("bert-base", mode="full",
+                                                steps=STEPS, cfg=dense_cfg)
+        _, acc_m, tr_m, tot_m, _ = finetune_cls("bert-base", mode="lfa",
+                                                steps=STEPS, cfg=base_cfg)
+        rows.append(f"table4,{name},acc={acc_d:.3f},"
+                    f"#Pr={tr_d / 1e3:.1f}k/#To={tot_d / 1e3:.1f}k")
+        rows.append(f"table4,mpop_{name},acc={acc_m:.3f},"
+                    f"#Pr={tr_m / 1e3:.1f}k/#To={tot_m / 1e3:.1f}k")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

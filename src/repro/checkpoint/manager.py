@@ -1,0 +1,133 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-k, async save, elastic
+restore.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` + ``meta.json``; the ``latest`` symlink
+is flipped only after a fully-written checkpoint (atomic rename), so a crash
+mid-save can never corrupt the restore point.  ``restore(..., shardings=...)``
+re-lays-out arrays onto any mesh — this is the elastic-resize path (a 256-chip
+checkpoint restores onto 512 chips and vice versa, since arrays are saved as
+full logical tensors).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        a = np.asarray(leaf)
+        if a.dtype.name == "bfloat16":  # npz has no native bf16
+            a = a.astype(np.float32)
+        out[key] = a
+    return out
+
+
+def _unflatten_into(template, arrays: dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing array {key}")
+        a = arrays[key]
+        if hasattr(leaf, "dtype"):
+            a = a.astype(leaf.dtype)
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- save ----
+
+    def save(self, step: int, tree, extra_meta: dict | None = None,
+             block: bool = False):
+        # snapshot to host memory synchronously (cheap), write async
+        arrays = _flatten(jax.device_get(tree))
+        meta = {"step": int(step), **(extra_meta or {})}
+        self.wait()  # never two writers (same step dir -> corruption race)
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, arrays, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, arrays, meta)
+
+    def _write(self, step: int, arrays, meta):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        latest = os.path.join(self.dir, "latest")
+        tmp_link = latest + ".tmp"
+        if os.path.lexists(tmp_link):
+            os.remove(tmp_link)
+        os.symlink(f"step_{step}", tmp_link)
+        os.replace(tmp_link, latest)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # ---- restore ----
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None, template, shardings=None):
+        """Restore into ``template``'s structure; optionally re-shard onto a
+        (possibly different) mesh — the elastic-resize path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}", "arrays.npz")
+        with np.load(path) as z:
+            arrays = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, arrays)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        meta_path = os.path.join(self.dir, f"step_{step}", "meta.json")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        return tree, meta

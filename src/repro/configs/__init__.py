@@ -1,0 +1,56 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, scaled_down
+
+# arch id -> module name
+ARCHS = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a66b",
+    "gemma2-27b": "gemma2_27b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "qwen3-14b": "qwen3_14b",
+    "llava-next-34b": "llava_next_34b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-130m": "mamba2_130m",
+    # the paper's own subjects
+    "albert-base": "albert_base",
+    "bert-base": "bert_base",
+}
+
+ASSIGNED = [a for a in ARCHS if a not in ("albert-base", "bert-base")]
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    cfg = mod.CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def smoke_config(name: str, **overrides) -> ModelConfig:
+    return scaled_down(get_config(name), **overrides)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch, shape) dry-run cells.
+
+    long_500k requires sub-quadratic attention -> only SSM/hybrid archs run
+    it (DESIGN §5); other cells are yielded with skip=True when requested.
+    """
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            skip = shape.name == "long_500k" and not cfg.subquadratic
+            if skip and not include_skipped:
+                continue
+            yield arch, shape.name, skip

@@ -1,0 +1,23 @@
+"""Assigned architecture config: gemma2-27b [dense; arXiv:2408.00118; hf]."""
+
+from repro.configs.base import ModelConfig
+from repro.core.layers import MPOConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    mlp_act="gelu",
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    local_window=4096,
+    tie_embeddings=True,
+    mpo=MPOConfig(enabled=True, n=5, bond_embed=64, bond_attn=128,
+                   bond_ffn=128, mode="auto", shard_multiple=16),
+)

@@ -1,0 +1,24 @@
+"""Assigned architecture config: llama4-maverick-400b-a17b [moe; hf:meta-llama/Llama-4; unverified]."""
+
+from repro.configs.base import ModelConfig
+from repro.core.layers import MPOConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=128,
+    top_k=1,
+    mlp_act="silu",
+    tie_embeddings=False,
+    parallelism="sp",
+    rope_theta=500000.0,
+    mpo=MPOConfig(enabled=True, n=5, bond_embed=64, bond_attn=128,
+                   bond_ffn=128, mode="auto", shard_multiple=16),
+)

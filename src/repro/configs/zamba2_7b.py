@@ -1,0 +1,26 @@
+"""Assigned architecture config: zamba2-7b [hybrid; arXiv:2411.15242; unverified]."""
+
+from repro.configs.base import ModelConfig
+from repro.core.layers import MPOConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=128,
+    attn_every=9,        # 81 = 9 segments x 9 mamba blocks
+    num_shared_attn=2,
+    subquadratic=True,
+    tie_embeddings=True,
+    mpo=MPOConfig(enabled=True, n=5, bond_embed=64, bond_attn=128,
+                   bond_ffn=128, mode="auto", shard_multiple=16),
+)

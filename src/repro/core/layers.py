@@ -1,0 +1,280 @@
+"""MPO-parameterized neural layers with logical sharding axes.
+
+Every ``init_*`` returns a params pytree whose leaves are ``Annot(value,
+axes)`` — ``axes`` is a tuple of logical axis names (or ``None``) per array
+dim, consumed by ``repro.parallel.sharding``.  ``split_annotations`` separates
+the tree into (params, axes) before use.
+
+The central MPO core of each factorized matrix lives under the key
+``"central"`` (auxiliary cores under ``"c{k}"``) — this naming is what
+``repro.core.lightweight`` keys on to build the paper's auxiliary-only
+fine-tuning masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mpo
+
+
+class Annot:
+    """Array + logical-axis names.  Registered as a pytree node whose child
+    is the array and whose aux data is the (static) axes tuple — so Annot
+    trees pass transparently through jit/vmap/eval_shape."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: tuple):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Annot({getattr(self.value, 'shape', self.value)}, {self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Annot,
+    lambda a: ((a.value,), a.axes),
+    lambda aux, ch: Annot(ch[0], aux),
+)
+
+
+def split_annotations(tree):
+    """(params, axes) from an Annot-leaf tree."""
+    is_annot = lambda x: isinstance(x, Annot)
+    params = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annot)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_annot)
+    return params, axes
+
+
+# --------------------------------------------------------------------------
+# config
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MPOConfig:
+    """How (and whether) matrices are MPO-factorized."""
+
+    enabled: bool = True
+    n: int = 5
+    bond_embed: int | None = 64
+    bond_attn: int | None = 128
+    bond_ffn: int | None = 128
+    # execution mode: auto | factorized | reconstruct | kernel
+    mode: str = "auto"
+    # divisibility required of central factors on model-sharded dims
+    shard_multiple: int = 1
+    # which core's legs carry the TP sharding: "first" (optimized — clean
+    # contiguous W tiles) or "central" (paper-naive port; EXPERIMENTS §Perf
+    # it.0 baseline)
+    shard_leg: str = "first"
+    # lightweight fine-tuning at the GRAPH level: stop_gradient the central
+    # cores so their (masked-away) gradients are never computed or
+    # all-reduced — the central tensor is the parameter mass, so this is
+    # most of the core-gradient traffic (§Perf it.16)
+    freeze_central_grads: bool = False
+
+    def bond_for(self, kind: str) -> int | None:
+        return {"embed": self.bond_embed, "attn": self.bond_attn,
+                "ffn": self.bond_ffn}[kind]
+
+
+DENSE = MPOConfig(enabled=False)
+
+
+def _safe_multiple(dim: int, multiple: int) -> int:
+    return multiple if (multiple > 1 and dim % multiple == 0) else 1
+
+
+def make_spec(cfg: MPOConfig, in_dim: int, out_dim: int, kind: str,
+              in_sharded: bool, out_sharded: bool) -> mpo.MPOSpec:
+    idx = 0 if cfg.shard_leg == "first" else cfg.n // 2
+    im = _safe_multiple(in_dim, cfg.shard_multiple) if in_sharded else 1
+    om = _safe_multiple(out_dim, cfg.shard_multiple) if out_sharded else 1
+    return mpo.MPOSpec(
+        in_factors=mpo.auto_factorize(in_dim, cfg.n, im, idx),
+        out_factors=mpo.auto_factorize(out_dim, cfg.n, om, idx),
+        bond_dim=cfg.bond_for(kind),
+    )
+
+
+# --------------------------------------------------------------------------
+# core naming / assembly
+# --------------------------------------------------------------------------
+
+
+def core_names(n: int) -> list[str]:
+    mid = n // 2
+    return ["central" if k == mid else f"c{k}" for k in range(n)]
+
+
+def cores_to_list(cores_dict: dict) -> list[jax.Array]:
+    n = len(cores_dict)
+    return [cores_dict[name] for name in core_names(n)]
+
+
+def cores_from_list(cores: Sequence[jax.Array]) -> dict:
+    return dict(zip(core_names(len(cores)), cores))
+
+
+def _core_axes(spec: mpo.MPOSpec, in_axis, out_axis,
+               shard_leg: str = "first") -> list[tuple]:
+    """Logical axes per core.
+
+    "first" (default): TP sharding on core 0's i/j legs — row-major factor
+    order makes those the outermost W digits, so the reconstructed W stays
+    cleanly tiled (DESIGN §3.3 / EXPERIMENTS §Perf it.1); the central core
+    (parameter mass) is FSDP-sharded along its leading bond.
+    "central": the paper-naive port (shard the central legs) — kept as the
+    §Perf it.0 baseline configuration.
+    """
+    tp_core = 0 if shard_leg == "first" else spec.central_index
+    axes = []
+    for k in range(spec.n):
+        if k == tp_core:
+            axes.append((None, in_axis, out_axis, None))
+        elif k == spec.central_index:
+            axes.append(("bond", None, None, None))
+        else:
+            axes.append((None, None, None, None))
+    return axes
+
+
+# --------------------------------------------------------------------------
+# linear / embedding
+# --------------------------------------------------------------------------
+
+
+def init_linear(key, in_dim: int, out_dim: int, *, cfg: MPOConfig,
+                kind: str = "ffn", in_axis=None, out_axis=None,
+                sharded_in: bool = False, sharded_out: bool = False,
+                scale: float | None = None, dtype=jnp.float32,
+                from_matrix: jax.Array | None = None):
+    """A (possibly MPO-factorized) ``in_dim -> out_dim`` matrix."""
+    if not cfg.enabled:
+        if from_matrix is not None:
+            w = jnp.asarray(from_matrix, dtype)
+        else:
+            std = scale if scale is not None else in_dim ** -0.5
+            w = std * jax.random.normal(key, (in_dim, out_dim), dtype)
+        return {"w": Annot(w, (in_axis, out_axis))}
+    spec = make_spec(cfg, in_dim, out_dim, kind, sharded_in, sharded_out)
+    if from_matrix is not None:
+        cores, _ = mpo.decompose(from_matrix, spec)
+        cores = [c.astype(dtype) for c in cores]
+    else:
+        cores = [c.astype(dtype)
+                 for c in mpo.init_cores(key, spec, scale=scale)]
+    ax = _core_axes(spec, in_axis if sharded_in else None,
+                    out_axis if sharded_out else None,
+                    shard_leg=cfg.shard_leg)
+    return {"cores": {name: Annot(c, a) for name, c, a in
+                      zip(core_names(spec.n), cores, ax)}}
+
+
+# ---- execution-mode selection (napkin math, see DESIGN §3.1) ----
+
+
+def flops_factorized_per_token(shapes: Sequence[tuple]) -> int:
+    """FLOPs/token of the sequential contraction in ``apply_mpo``."""
+    ins = [s[1] for s in shapes]
+    outs = [s[2] for s in shapes]
+    total, rest = 0, math.prod(ins)
+    out_done = 1
+    for (d0, ik, jk, d1) in shapes:
+        rest //= ik
+        total += 2 * out_done * d0 * ik * rest * jk * d1
+        out_done *= jk
+    return total
+
+
+def flops_reconstruct(shapes: Sequence[tuple]) -> int:
+    """One-time FLOPs to contract the cores into W."""
+    total = 0
+    acc_rows = shapes[0][1] * shapes[0][2]
+    for (d0, ik, jk, d1) in shapes[1:]:
+        total += 2 * acc_rows * d0 * ik * jk * d1
+        acc_rows *= ik * jk
+    return total
+
+
+def choose_mode(cfg: MPOConfig, shapes: Sequence[tuple], tokens: int) -> str:
+    if cfg.mode != "auto":
+        return cfg.mode
+    ins = math.prod(s[1] for s in shapes)
+    outs = math.prod(s[2] for s in shapes)
+    cost_fact = tokens * flops_factorized_per_token(shapes)
+    cost_recon = flops_reconstruct(shapes) + tokens * 2 * ins * outs
+    return "factorized" if cost_fact < cost_recon else "reconstruct"
+
+
+def apply_linear(params: dict, x: jax.Array, *, cfg: MPOConfig,
+                 transpose: bool = False) -> jax.Array:
+    """y = x @ W (or x @ W^T), choosing the cheaper execution path.
+
+    Master weights stay f32; compute is cast to the activation dtype
+    (bf16 on the MXU) at the point of use.
+    """
+    if "w" in params:
+        w = params["w"].astype(x.dtype)
+        return x @ (w.T if transpose else w)
+    cores = [c.astype(x.dtype) for c in cores_to_list(params["cores"])]
+    if cfg.freeze_central_grads:
+        mid = len(cores) // 2
+        cores[mid] = jax.lax.stop_gradient(cores[mid])
+    if transpose:
+        cores = mpo.transpose_cores(cores)
+    shapes = [c.shape for c in cores]
+    tokens = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    mode = choose_mode(cfg, shapes, tokens)
+    if mode == "kernel":
+        from repro.kernels import ops  # lazy: avoid import cycle
+        return ops.mpo_linear(cores, x)
+    if mode == "factorized":
+        return mpo.apply_mpo(cores, x)
+    return mpo.matmul_reconstruct(x, tuple(cores))
+
+
+def init_embedding(key, vocab: int, dim: int, *, cfg: MPOConfig,
+                   vocab_axis="vocab", dim_axis=None, dtype=jnp.float32,
+                   from_matrix: jax.Array | None = None):
+    # MPO-compressed embedding cores are small enough to REPLICATE: sharding
+    # the central core's vocab leg turns the factorized row-gather into a
+    # full replication + 8 GB intermediate under GSPMD (observed on the
+    # 2x16x16 dry-run).  Dense (mpo disabled) embeddings keep vocab sharding.
+    sharded_in = not cfg.enabled
+    return init_linear(key, vocab, dim, cfg=cfg, kind="embed",
+                       in_axis=vocab_axis, out_axis=dim_axis,
+                       sharded_in=sharded_in, sharded_out=False,
+                       scale=0.02, dtype=dtype, from_matrix=from_matrix)
+
+
+def apply_embedding(params: dict, ids: jax.Array, *, cfg: MPOConfig,
+                    dtype=None) -> jax.Array:
+    if "w" in params:
+        w = params["w"] if dtype is None else params["w"].astype(dtype)
+        return jnp.take(w, ids, axis=0)
+    cores = cores_to_list(params["cores"])
+    if dtype is not None:
+        cores = [c.astype(dtype) for c in cores]
+    if cfg.freeze_central_grads:
+        mid = len(cores) // 2
+        cores[mid] = jax.lax.stop_gradient(cores[mid])
+    return mpo.embed_lookup(cores, ids)
+
+
+def apply_logits(params: dict, h: jax.Array, *, cfg: MPOConfig) -> jax.Array:
+    """Tied-embedding output head: h @ E^T."""
+    return apply_linear(params, h, cfg=cfg, transpose=True)
+
+
+def linear_num_params(params: dict) -> int:
+    leaves = jax.tree.leaves(params)
+    return sum(int(math.prod(l.shape)) for l in leaves)

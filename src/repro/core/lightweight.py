@@ -1,0 +1,82 @@
+"""Lightweight fine-tuning (paper §4.1): train only the auxiliary tensors.
+
+After MPO decomposition the *central* tensor holds most parameters / most
+entanglement entropy; the paper freezes it and fine-tunes only the auxiliary
+tensors (+ the small non-MPO leaves: norms, biases).  We realize this as a
+boolean *trainability mask* pytree consumed by the optimizer — masked leaves
+never receive updates and never allocate optimizer state (memory win), and
+under data parallelism they produce no gradient all-reduce traffic when the
+optimizer drops their grads before the reduction.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _path_has(path, name: str) -> bool:
+    for p in path:
+        key = getattr(p, "key", getattr(p, "name", None))
+        if key == name:
+            return True
+    return False
+
+
+def trainable_mask(params, *, mode: str = "lfa", train_non_mpo: bool = True):
+    """Boolean pytree: True = trainable.
+
+    mode="full" -> everything trainable (paper's MPOP_full baseline);
+    mode="lfa"  -> central cores frozen (paper's lightweight fine-tuning);
+    mode="central_only" -> inverse ablation (aux frozen).
+    """
+    if mode not in ("full", "lfa", "central_only"):
+        raise ValueError(mode)
+
+    def label(path, leaf):
+        if mode == "full":
+            return True
+        central = _path_has(path, "central")
+        is_mpo = central or any(
+            (getattr(p, "key", None) or "").startswith("c")
+            and (getattr(p, "key", "") or "")[1:].isdigit()
+            for p in path
+        )
+        if mode == "lfa":
+            if central:
+                return False
+            return True if is_mpo else train_non_mpo
+        # central_only
+        return central
+
+    return jax.tree_util.tree_map_with_path(label, params)
+
+
+def count_params(tree) -> int:
+    return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(tree)
+               if hasattr(l, "shape"))
+
+
+def count_trainable(params, mask) -> tuple[int, int]:
+    """(trainable, total) parameter counts."""
+    total, train = 0, 0
+    for leaf, m in zip(jax.tree.leaves(params), jax.tree.leaves(mask)):
+        n = int(math.prod(leaf.shape))
+        total += n
+        if m:
+            train += n
+    return train, total
+
+
+def apply_mask_to_grads(grads, mask):
+    """Zero out gradients of frozen leaves (keeps pytree structure)."""
+    return jax.tree.map(
+        lambda g, m: g if m else jnp.zeros_like(g), grads, mask)
+
+
+def reduction_savings(params, mask) -> float:
+    """Fraction of gradient all-reduce bytes eliminated by LFA."""
+    train, total = count_trainable(params, mask)
+    return 1.0 - train / max(total, 1)

@@ -1,0 +1,113 @@
+"""Fused MPO-reconstruct + matmul Pallas TPU kernel.
+
+``reconstruct`` mode round-trips the dense W through HBM (and, sharded, an
+all-gather) every step.  This kernel tiles the grid over the *leading MPO
+factors* (i1, j1): each program rebuilds one ``(I/i1, J/j1)`` tile of W from
+the (tiny, VMEM-resident) cores via on-chip chain dots and immediately
+consumes it in the x-tile matmul, accumulating over the i1 reduction axis.
+W never exists in HBM — per-step HBM traffic is activations + *compressed*
+cores only, which is the TPU-native realization of the paper's compression
+claim (DESIGN §3.2).
+
+Grid: ``(M/bm, j1, i1)`` — i1 innermost = sequential reduction over the
+output tile (standard Pallas accumulation pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_reconstruct(core_refs, n: int):
+    """Rebuild the (I1, J1) W-tile for this program's (i1, j1) block.
+
+    core_refs[0] is blocked to (1,1,1,d1) — the (i1,j1) fiber of core 0;
+    the remaining cores are loaded whole (they are small by construction).
+    """
+    ins = [r.shape[1] for r in core_refs]
+    outs = [r.shape[2] for r in core_refs]
+    acc = core_refs[0][0, 0, 0, :][None, :].astype(jnp.float32)  # (1, d1)
+    for k in range(1, n):
+        c = core_refs[k][...].astype(jnp.float32)
+        d0 = c.shape[0]
+        acc = acc.reshape(-1, d0) @ c.reshape(d0, -1)
+        acc = acc.reshape(-1, c.shape[-1])
+    # acc rows are (i2,j2,...,in,jn) interleaved; -> (I1, J1)
+    t = acc.reshape([d for k in range(1, n) for d in (ins[k], outs[k])])
+    perm = ([2 * k for k in range(n - 1)]
+            + [2 * k + 1 for k in range(n - 1)])
+    i1 = math.prod(ins[1:])
+    j1 = math.prod(outs[1:])
+    return t.transpose(perm).reshape(i1, j1)
+
+
+def _kernel(*refs, n: int, n_i1: int):
+    core_refs = refs[:n]
+    x_ref, o_ref = refs[n], refs[n + 1]
+    w_tile = _tile_reconstruct(core_refs, n)               # (I1, J1) f32
+    x_tile = x_ref[...].astype(jnp.float32)                # (bm, I1)
+    part = x_tile @ w_tile                                 # (bm, J1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
+               block_m: int = 256, interpret: bool = True) -> jax.Array:
+    """``y[..., J] = x[..., I] @ W(cores)`` without materializing W in HBM.
+
+    ``interpret=True`` runs the kernel body in Python on CPU (this container
+    has no TPU); on TPU pass ``interpret=False``.
+    """
+    cores = list(cores)
+    n = len(cores)
+    ins = [c.shape[1] for c in cores]
+    outs = [c.shape[2] for c in cores]
+    i_dim = math.prod(ins)
+    j_dim = math.prod(outs)
+    lead = x.shape[:-1]
+    m = math.prod(lead) if lead else 1
+    xm = x.reshape(m, i_dim)
+
+    bm = min(block_m, m)
+    pad_m = (-m) % bm
+    if pad_m:
+        xm = jnp.pad(xm, ((0, pad_m), (0, 0)))
+    mt = xm.shape[0] // bm
+    i1, j1 = ins[0], outs[0]
+    i1_blk = i_dim // i1
+    j1_blk = j_dim // j1
+
+    in_specs = [pl.BlockSpec((1, 1, 1, cores[0].shape[-1]),
+                             lambda mi, jj, ii: (0, ii, jj, 0))]
+    for c in cores[1:]:
+        in_specs.append(pl.BlockSpec(c.shape, lambda mi, jj, ii: (0,) * 4))
+    # x blocked over (m, i1): (bm, I/i1)
+    in_specs.append(pl.BlockSpec((bm, i1_blk), lambda mi, jj, ii: (mi, ii)))
+    out_spec = pl.BlockSpec((bm, j1_blk), lambda mi, jj, ii: (mi, jj))
+
+    kernel = functools.partial(_kernel, n=n, n_i1=i1)
+    y = pl.pallas_call(
+        kernel,
+        grid=(mt, j1, i1),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((xm.shape[0], j_dim), x.dtype),
+        interpret=interpret,
+    )(*cores, xm)
+    if pad_m:
+        y = y[:m]
+    return y.reshape(*lead, j_dim)

@@ -1,0 +1,24 @@
+"""jit'd public wrappers for the Pallas kernels."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+from repro.kernels.mpo_linear import mpo_linear as _mpo_linear
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+# interpret=True executes kernel bodies in Python on CPU (this container);
+# flip to False on real TPU.
+INTERPRET = True
+
+
+def mpo_linear(cores: Sequence[jax.Array], x: jax.Array,
+               block_m: int = 256) -> jax.Array:
+    return _mpo_linear(tuple(cores), x, block_m=block_m, interpret=INTERPRET)
+
+
+def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int = 64):
+    return _ssd_scan(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                     interpret=INTERPRET)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references)."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def mpo_linear_ref(cores: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """y = x @ reconstruct(cores) — the oracle for the fused kernel."""
+    n = len(cores)
+    ins = [c.shape[1] for c in cores]
+    outs = [c.shape[2] for c in cores]
+    acc = cores[0].reshape(-1, cores[0].shape[-1])
+    for c in cores[1:]:
+        acc = (acc @ c.reshape(c.shape[0], -1)).reshape(-1, c.shape[-1])
+    perm = [2 * k for k in range(n)] + [2 * k + 1 for k in range(n)]
+    t = acc.reshape([d for k in range(n) for d in (ins[k], outs[k])])
+    w = t.transpose(perm).reshape(math.prod(ins), math.prod(outs))
+    return x @ w.astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, d_skip):
+    """Sequential SSD recurrence oracle (see models/mamba.ssd_reference)."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, t):
+        da = jnp.exp(-jnp.exp(a_log.astype(jnp.float32))
+                     * dt[:, t].astype(jnp.float32))
+        xw = x[:, t].astype(jnp.float32) * dt[:, t][..., None]
+        new = (state * da[..., None, None]
+               + jnp.einsum("bn,bhp->bhnp", b[:, t].astype(jnp.float32), xw))
+        y = jnp.einsum("bn,bhnp->bhp", c[:, t].astype(jnp.float32), new)
+        y = y + x[:, t].astype(jnp.float32) * d_skip[None, :, None]
+        return new, y
+
+    state0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

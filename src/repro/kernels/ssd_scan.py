@@ -1,0 +1,93 @@
+"""Chunked Mamba2-SSD Pallas TPU kernel.
+
+Grid ``(B, H, NC)`` with the chunk axis innermost/sequential: the (N, P)
+SSM state lives in a VMEM scratch buffer and is carried across chunk steps
+(re-initialized when a new (batch, head) program starts at chunk 0).  Per
+program: intra-chunk quadratic attention-analog + inter-chunk state update —
+the state never round-trips HBM between chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, dsk_ref, o_ref, state,
+            *, q: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    a = alog_ref[0]
+    dsk = dsk_ref[0]
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)            # (q,)
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)           # (q, P)
+    bm = b_ref[0, 0, :, :].astype(jnp.float32)             # (q, N)
+    cm = c_ref[0, 0, :, :].astype(jnp.float32)             # (q, N)
+
+    da = -jnp.exp(a) * dt                                  # (q,), <= 0
+    dacum = jnp.cumsum(da)                                 # (q,)
+    xw = x * dt[:, None]                                   # (q, P)
+
+    # intra-chunk: L[i,j] = exp(sum_{j<k<=i} da_k), lower-triangular
+    seg = dacum[:, None] - dacum[None, :]
+    tri = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    lmat = jnp.where(tri, jnp.exp(seg), 0.0)               # (q, q)
+    scores = cm @ bm.T                                     # (q, q)
+    y = (scores * lmat) @ xw                               # (q, P)
+
+    # inter-chunk: contribution of the carried state
+    prev = state[...]                                      # (N, P)
+    y = y + (cm * jnp.exp(dacum)[:, None]) @ prev
+
+    # state update for the next chunk
+    decay_to_end = jnp.exp(dacum[-1] - dacum)              # (q,)
+    state[...] = (prev * jnp.exp(dacum[-1])
+                  + (bm * decay_to_end[:, None]).T @ xw)
+
+    y = y + x * dsk
+    o_ref[0, 0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, b, c, d_skip, *, chunk: int = 64,
+             interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); a_log,d_skip: (H,); b,c: (B,S,N)."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    q = chunk
+    assert s % q == 0
+    nc = s // q
+    xr = x.reshape(bs, nc, q, h, p)
+    dtr = dt.reshape(bs, nc, q, h)
+    br = b.reshape(bs, nc, q, n)
+    cr = c.reshape(bs, nc, q, n)
+
+    grid = (bs, h, nc)
+    y = pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, hi, ci: (bi, ci, 0, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, 1, p),
+                               lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, nc, q, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, a_log.astype(jnp.float32), br, cr,
+      d_skip.astype(jnp.float32))
+    return y.reshape(bs, s, h, p)

@@ -1,0 +1,78 @@
+"""Roofline-term derivation from dry-run artifacts (TPU v5e model).
+
+compute_s    = HLO_FLOPs_total   / (chips * peak_FLOPs)
+memory_s     = HLO_bytes_total   / (chips * HBM_bw)
+collective_s = collective_bytes  / (chips * ICI_bw)
+
+``compiled.cost_analysis()`` on a GSPMD-partitioned module reports the
+*per-device* program; we calibrate this empirically in tests (see
+tests/test_roofline.py) and normalize to totals via ``devices``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link (~= usable per-chip collective bw)
+
+
+def active_param_count(cfg) -> int:
+    """Active parameters (MoE: only top_k experts count) of the built model."""
+    from repro.models import model as M
+    model = M.build(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    from repro.core.layers import Annot
+    is_annot = lambda x: isinstance(x, Annot)
+    vals = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annot)
+    flat = jax.tree_util.tree_flatten_with_path(vals)[0]
+    total = 0
+    for path, sd in flat:
+        n = math.prod(sd.shape)
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if "experts" in keys and cfg.num_experts:
+            n = n * cfg.top_k / cfg.num_experts
+        total += n
+    return int(total)
+
+
+def roofline(rec: dict) -> dict:
+    """Augment one dry-run record with the three roofline terms (seconds).
+
+    All inputs are per-device trip-count-corrected numbers from
+    ``hlo_analysis`` (see its docstring for why raw cost_analysis is wrong on
+    scanned layer stacks): term = per-device work / per-chip peak.
+    """
+    chips = rec["devices"]
+    flops_pd = rec["flops_per_device"]
+    bytes_pd = rec["bytes_per_device"]
+    coll_pd = sum(rec["collective_bytes"].values())
+
+    compute_s = flops_pd / PEAK_FLOPS_BF16
+    memory_s = bytes_pd / HBM_BW
+    collective_s = coll_pd / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    useful = rec.get("model_flops", 0.0)            # 6·N_mpo·D
+    useful_dense = rec.get("model_flops_dense", useful)  # 6·N_dense·D
+    flops_total = flops_pd * chips
+    mfu = ((useful / (chips * PEAK_FLOPS_BF16)) / step_s
+           if step_s else 0.0)
+    mfu_dense = ((useful_dense / (chips * PEAK_FLOPS_BF16)) / step_s
+                 if step_s else 0.0)
+    return dict(
+        rec,
+        **terms,
+        dominant=dominant,
+        # fraction of compiled FLOPs that are "useful" MPO-model FLOPs —
+        # catches remat/redundancy waste (and dense-reconstruct overhead)
+        useful_flops_ratio=(useful / flops_total) if flops_total else 0.0,
+        roofline_fraction=min(mfu, 1.0),
+        roofline_fraction_dense_equiv=min(mfu_dense, 1.0),
+    )

@@ -1,0 +1,94 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen3-14b ...``
+
+Runs on whatever devices exist (CPU smoke -> TPU pod); the mesh is built
+from the local device count with a ``--model-parallel`` factor.  On a real
+multi-host pod this is launched once per host (see run_multihost.sh) and
+jax.distributed handles the rendezvous.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, optim
+from repro.configs.base import ShapeConfig
+from repro.core import lightweight
+from repro.data.pipeline import make_batch_fn
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.parallel import sharding as S
+from repro.train.loop import LoopConfig, run_training
+from repro.train.steps import TrainState, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--finetune", choices=["full", "lfa", "central_only"],
+                    default="lfa")
+    ap.add_argument("--dense", action="store_true", help="disable MPO")
+    ap.add_argument("--optimizer", choices=["adamw", "adafactor", "sgdm"],
+                    default="adamw")
+    ap.add_argument("--compress", choices=["none", "int8", "topk"],
+                    default="none")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    if args.dense:
+        cfg = dataclasses.replace(
+            cfg, mpo=dataclasses.replace(cfg.mpo, enabled=False))
+    shape = ShapeConfig("cli", "train", args.seq_len, args.batch)
+
+    mesh = make_host_mesh(model=args.model_parallel)
+    sp = cfg.parallelism == "sp"
+    rules = S.make_rules(mesh, fsdp=False, sp=sp)
+    model = M.build(cfg)
+
+    params, axes = model.init_params(jax.random.PRNGKey(0))
+    mask = lightweight.trainable_mask(params, mode=args.finetune)
+    tr, tot = lightweight.count_trainable(params, mask)
+    print(f"[train] {args.arch} params={tot / 1e6:.2f}M "
+          f"trainable={tr / 1e6:.2f}M ({tr / tot:.1%})")
+
+    sched = optim.cosine_warmup(args.lr, warmup=min(50, args.steps // 10 + 1),
+                                total=args.steps)
+    opt = {"adamw": optim.adamw, "adafactor": optim.adafactor,
+           "sgdm": optim.sgdm}[args.optimizer](sched, mask=mask)
+    if args.compress != "none":
+        opt = optim.wrap_compression(opt, kind=args.compress, mask=mask)
+
+    from repro.parallel.ctx import current_mesh, sequence_parallel
+    with mesh, current_mesh(mesh), sequence_parallel(sp):
+        p_shardings = S.tree_shardings(
+            axes, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                               params), mesh, rules)
+        params = jax.tree.map(jax.device_put, params, p_shardings)
+        state = TrainState(params, opt.init(params))
+        step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+        bf = make_batch_fn(cfg, shape)
+        loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every)
+        state, hist = run_training(
+            step, state, bf, loop,
+            to_device=lambda b: {k: jnp.asarray(v) for k, v in b.items()})
+    if hist:
+        print(f"[train] final loss {hist[-1]['loss']:.4f}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,251 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure-JAX chunked algorithm.
+
+Reference: Dao & Gu, "Transformers are SSMs" (arXiv:2405.21060).  The chunked
+SSD computation (intra-chunk quadratic + inter-chunk state recurrence) is the
+TPU-friendly formulation: activations stay O(S·P·N/Q) instead of O(S·P·N).
+
+Projection matrices (in_proj / out_proj) are MPO-factorized — the paper's
+technique applied to the SSM family (DESIGN §5).  The SSD scalars (A_log, D,
+dt_bias) are vectors and stay dense.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import layers as L
+from repro.core.layers import Annot, MPOConfig
+from repro.models import nn
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular 'segment sums': out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    t = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)    inputs (head dim P)
+    dt: (B, S, H)       softplus-activated step sizes
+    a_log: (H,)         log(-A) per head
+    b, c: (B, S, N)     input/output projections (single group)
+    d_skip: (H,)        skip connection
+    Returns y: (B, S, H, P).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+
+    da = -jnp.exp(a_log.astype(jnp.float32)) * dt.astype(jnp.float32)  # (B,S,H) <= 0
+    xw = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]     # dt-weighted input
+
+    # chunked views
+    xc = xw.reshape(bs, nc, q, h, p)
+    dac = da.reshape(bs, nc, q, h)
+    bc = b.astype(jnp.float32).reshape(bs, nc, q, n)
+    cc = c.astype(jnp.float32).reshape(bs, nc, q, n)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    lmat = jnp.exp(segsum(dac.transpose(0, 1, 3, 2)))         # (B,NC,H,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)            # (B,NC,q,q)
+    att = scores[:, :, None] * lmat                            # (B,NC,H,q,q)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", att, xc)
+
+    # ---- chunk states ----
+    dacum = jnp.cumsum(dac, axis=2)                            # (B,NC,q,H)
+    decay_to_end = jnp.exp(dacum[:, :, -1:, :] - dacum)        # (B,NC,q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence over NC ----
+    chunk_decay = jnp.exp(dacum[:, :, -1, :])                  # (B,NC,H)
+
+    def scan_fn(prev, inp):
+        dec, st = inp
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, jnp.zeros_like(states[:, 0]),
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (B,NC,H,N,P)
+
+    # ---- off-diagonal contribution ----
+    decay_from_start = jnp.exp(dacum)                          # (B,NC,q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cc, decay_from_start,
+                       prev_states)
+
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    """One-token recurrence.  state: (B,H,N,P);  x_t: (B,H,P);  b/c_t: (B,N)."""
+    da = jnp.exp(-jnp.exp(a_log.astype(jnp.float32)) * dt_t.astype(jnp.float32))  # (B,H)
+    xw = x_t.astype(jnp.float32) * dt_t[..., None]
+    new_state = (state * da[..., None, None]
+                 + jnp.einsum("bn,bhp->bhnp", b_t.astype(jnp.float32), xw))
+    y = jnp.einsum("bn,bhnp->bhp", c_t.astype(jnp.float32), new_state)
+    y = y + x_t.astype(jnp.float32) * d_skip[None, :, None]
+    return new_state, y.astype(x_t.dtype)
+
+
+def ssd_reference(x, dt, a_log, b, c, d_skip):
+    """Naive O(S) sequential recurrence — oracle for tests."""
+    bs, s, h, p = x.shape
+
+    def step(state, t):
+        return ssd_decode_step(state, x[:, t], dt[:, t], a_log, b[:, t],
+                               c[:, t], d_skip)
+
+    n = b.shape[-1]
+    state0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3)  # (B,S,H,P)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * di + 2 * n + h   # [z, x, B, C, dt]
+    return {
+        "norm": nn.init_rmsnorm(d),
+        "in_proj": L.init_linear(k1, d, proj_out, cfg=cfg.mpo, kind="ffn",
+                                 out_axis="ffn", sharded_out=True),
+        "out_proj": L.init_linear(k2, di, d, cfg=cfg.mpo, kind="ffn",
+                                  in_axis="ffn", sharded_in=True,
+                                  scale=di ** -0.5),
+        "a_log": Annot(jnp.zeros((h,), jnp.float32), (None,)),
+        "d_skip": Annot(jnp.ones((h,), jnp.float32), (None,)),
+        "dt_bias": Annot(jnp.zeros((h,), jnp.float32), (None,)),
+        "out_norm": nn.init_rmsnorm(di),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + n]
+    c = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xs, b, c, dt
+
+
+def apply_mamba_block(params, x, cfg: ModelConfig, *, state=None,
+                      decode: bool = False):
+    """Returns (y, new_state).  decode=True -> single-token recurrence."""
+    bsz = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    res = x
+    hmid = nn.apply_rmsnorm(params["norm"], x)
+    zxbcdt = L.apply_linear(params["in_proj"], hmid, cfg=cfg.mpo)
+    z, xs, b, c, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xs = xs.reshape(xs.shape[:-1] + (h, p))
+    if not decode:
+        y, new_state = ssd_chunked(xs, dt, params["a_log"], b, c,
+                                   params["d_skip"], cfg.ssm_chunk)
+    else:
+        new_state, y = ssd_decode_step(state, xs[:, 0], dt[:, 0],
+                                       params["a_log"], b[:, 0], c[:, 0],
+                                       params["d_skip"])
+        y = y[:, None]
+    y = y.reshape(bsz, -1, di)
+    y = nn.apply_rmsnorm(params["out_norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = L.apply_linear(params["out_proj"], y, cfg=cfg.mpo)
+    return res + out.astype(res.dtype), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    return jnp.zeros((cfg.num_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                      cfg.ssm_head_dim), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# pure-SSM model (mamba2-130m)
+# --------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_layers = jax.random.split(key)
+    return {
+        "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model,
+                                  cfg=cfg.mpo),
+        "layers": nn.stack_layers(lambda k: init_mamba_block(k, cfg),
+                                  k_layers, cfg.num_layers),
+        "final_norm": nn.init_rmsnorm(cfg.d_model),
+    }
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = x.astype(cfg.jnp_dtype)
+
+    def body(x, layer):
+        y, _ = apply_mamba_block(layer, x, cfg)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return nn.apply_rmsnorm(params["final_norm"], x), jnp.float32(0)
+
+
+def logits_head(params, hidden, cfg: ModelConfig):
+    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    hidden, aux = forward_hidden(params, batch, cfg)
+    return logits_head(params, hidden, cfg), aux
+
+
+def prefill(params, batch, state, cfg: ModelConfig):
+    """SSM prefill: run the chunked scan, keep each layer's final state."""
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = x.astype(cfg.jnp_dtype)
+
+    def body(x, layer):
+        y, final_state = apply_mamba_block(layer, x, cfg)
+        return y, final_state
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo)
+    return logits, states
+
+
+def decode_step(params, tokens, state, cfg: ModelConfig):
+    """tokens: (B,1); state: (L,B,H,N,P)."""
+    x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = x.astype(cfg.jnp_dtype)
+
+    def body(x, scanned):
+        layer, st = scanned
+        y, new_st = apply_mamba_block(layer, x, cfg, state=st, decode=True)
+        return y, new_st
+
+    x, new_states = jax.lax.scan(body, x, (params["layers"], state))
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    return L.apply_logits(params["embed"], x, cfg=cfg.mpo), new_states

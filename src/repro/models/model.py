@@ -1,0 +1,113 @@
+"""Unified model API: family dispatch + ShapeDtypeStruct input specs.
+
+``build(cfg)`` returns a ``Model`` whose methods close over the config.  The
+``input_specs`` / ``cache_specs`` functions return ``jax.ShapeDtypeStruct``
+stand-ins (no allocation) — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import layers as L
+from repro.models import mamba, transformer, whisper, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable           # key -> Annot tree
+    forward: Callable        # (params, batch) -> (logits, aux)
+    forward_hidden: Callable  # (params, batch) -> (hidden, aux)
+    logits_head: Callable    # (params, hidden) -> logits
+    init_cache: Callable     # (batch, max_len) -> cache pytree
+    prefill: Callable        # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable    # (params, tokens, cache) -> (logits, cache)
+
+    def init_params(self, key):
+        """(params, axes) — values split from logical-axis annotations."""
+        return L.split_annotations(self.init(key))
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    mod = {"dense": transformer, "moe": transformer, "vlm": transformer,
+           "ssm": mamba, "hybrid": zamba, "encdec": whisper}.get(fam)
+    if mod is None:
+        raise ValueError(f"unknown family {fam}")
+    init_cache = (lambda b, m: mamba.init_ssm_state(cfg, b)) if fam == "ssm" \
+        else (lambda b, m: mod.init_cache(cfg, b, m))
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init(key, cfg),
+        forward=lambda p, b: mod.forward(p, b, cfg),
+        forward_hidden=lambda p, b: mod.forward_hidden(p, b, cfg),
+        logits_head=lambda p, h: mod.logits_head(p, h, cfg),
+        init_cache=init_cache,
+        prefill=lambda p, b, c: mod.prefill(p, b, c, cfg),
+        decode_step=lambda p, t, c: mod.decode_step(p, t, c, cfg),
+    )
+
+
+# --------------------------------------------------------------------------
+# shape-struct inputs for the dry-run
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Model inputs for one (arch x shape) cell, as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            text = s - cfg.frontend_len
+            return {"tokens": _sds((b, text), i32),
+                    "patches": _sds((b, cfg.frontend_len, cfg.frontend_dim), bf16),
+                    "labels": _sds((b, s), i32)}
+        if cfg.family == "encdec":
+            return {"frames": _sds((b, cfg.frontend_len, cfg.d_model), bf16),
+                    "tokens": _sds((b, s), i32),
+                    "labels": _sds((b, s), i32)}
+        return {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            text = s - cfg.frontend_len
+            return {"tokens": _sds((b, text), i32),
+                    "patches": _sds((b, cfg.frontend_len, cfg.frontend_dim), bf16)}
+        if cfg.family == "encdec":
+            return {"frames": _sds((b, cfg.frontend_len, cfg.d_model), bf16),
+                    "tokens": _sds((b, s), i32)}
+        return {"tokens": _sds((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": _sds((b, 1), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cache ShapeDtypeStructs (mirrors each family's init_cache)."""
+    b, s = shape.global_batch, shape.seq_len
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init_cache(b, s))
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None):
+    """Concrete (small-scale) batch matching input_specs — for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sd in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sd.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sd.shape, 0,
+                                           min(cfg.vocab_size, 1000), sd.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sd.shape, jnp.float32).astype(sd.dtype)
+    return out

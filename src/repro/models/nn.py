@@ -1,0 +1,257 @@
+"""Shared neural building blocks (MPO-aware) for the architecture zoo.
+
+All init functions return ``Annot``-leaf trees (value + logical axes); apply
+functions consume plain value trees (post ``split_annotations``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.layers import Annot, MPOConfig
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int):
+    return {"scale": Annot(jnp.ones((dim,), jnp.float32), ("embed",))}
+
+
+def apply_rmsnorm(params, x, eps: float = 1e-6):
+    # variance reduction in f32, normalize/scale muls in the compute dtype —
+    # keeps the (all-reduced) activation gradients bf16 (EXPERIMENTS §Perf A)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def init_layernorm(dim: int):
+    return {"scale": Annot(jnp.ones((dim,), jnp.float32), ("embed",)),
+            "bias": Annot(jnp.zeros((dim,), jnp.float32), ("embed",))}
+
+
+def apply_layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return ((x - mu.astype(x.dtype)) * inv * params["scale"].astype(x.dtype)
+            + params["bias"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA + local windows + softcap + qk-norm)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    causal: bool = True
+    use_rope: bool = True
+
+
+def init_attention(key, cfg: AttnCfg, mpo: MPOConfig, *, cross: bool = False):
+    kq, kk, kv, ko, _ = jax.random.split(key, 5)
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    # TP-shard a projection only if its HEAD count divides the model axis —
+    # sharding the flattened (H*Dh) dim otherwise splits head_dim after the
+    # reshape and GSPMD all-reduces the (Sq x Sk) attention scores
+    # (observed 300 GiB/step on qwen3 with 40 heads over 16; §Perf it.13).
+    q_ok = mpo.shard_multiple <= 1 or h % mpo.shard_multiple == 0
+    kv_ok = mpo.shard_multiple <= 1 or kvh % mpo.shard_multiple == 0
+    p = {
+        "wq": L.init_linear(kq, d, h * dh, cfg=mpo, kind="attn",
+                            out_axis="qkv", sharded_out=q_ok),
+        "wk": L.init_linear(kk, d, kvh * dh, cfg=mpo, kind="attn",
+                            out_axis="kv_qkv", sharded_out=kv_ok),
+        "wv": L.init_linear(kv, d, kvh * dh, cfg=mpo, kind="attn",
+                            out_axis="kv_qkv", sharded_out=kv_ok),
+        "wo": L.init_linear(ko, h * dh, d, cfg=mpo, kind="attn",
+                            in_axis="qkv", sharded_in=q_ok,
+                            scale=(h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def attention_scores(q, k, cfg: AttnCfg, mask):
+    """Grouped-query scores without materializing repeated K.
+
+    q: (B,Sq,H,Dh), k: (B,Sk,KV,Dh) -> (B,KV,G,Sq,Sk) softmax weights
+    (H = KV*G).  Avoiding ``jnp.repeat`` keeps the KV tensors in whatever
+    layout the cache uses (seq-sharded under flash-decoding; §Perf it.10)
+    and skips a (B,S,H,Dh)-sized materialization.
+    """
+    b, sq, h, dh = q.shape
+    g = h // cfg.num_kv_heads
+    qg = q.reshape(b, sq, cfg.num_kv_heads, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / math.sqrt(cfg.head_dim)
+    if cfg.attn_softcap:
+        c = cfg.attn_softcap
+        scores = c * jnp.tanh(scores / c)
+    scores = jnp.where(mask[:, :, None], scores, -2.3819763e38)
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+def causal_mask(sq: int, sk: int, *, window: int | None = None,
+                offset: int = 0) -> jax.Array:
+    """(1,1,Sq,Sk) boolean; query i attends key j iff j <= i+offset
+    (and i+offset-j < window for local attention)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (qi - kj < window)
+    return m[None, None]
+
+
+def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
+                    positions, mask, kv_x=None, cache=None):
+    """Returns (y, new_cache).
+
+    ``cache``: dict(k, v, pos) for incremental decode; ``kv_x`` for
+    cross-attention (ignores cache k/v writes when provided with cache —
+    cross k/v are precomputed in the cache by prefill).
+    """
+    b = x.shape[0]
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(L.apply_linear(params["wq"], x, cfg=mpo), h, dh)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(L.apply_linear(params["wk"], src, cfg=mpo), kvh, dh)
+    v = _split_heads(L.apply_linear(params["wv"], src, cfg=mpo), kvh, dh)
+    if cfg.qk_norm:
+        q = apply_rmsnorm(params["q_norm"], q)
+        k = apply_rmsnorm(params["k_norm"], k)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        # sequence-parallel: Q stays seq-sharded; K/V are gathered across
+        # the model axis (the one AG sequence parallelism pays per layer)
+        from repro.parallel.ctx import gather_seq
+        k = gather_seq(k)
+        v = gather_seq(v)
+    new_cache = None
+    if cache is not None:
+        if kv_x is None:  # self-attention decode: append to ring buffer
+            from repro.parallel.ctx import shard_dims  # lazy: avoid cycle
+            idx = cache["pos"]
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, idx, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, idx, 0, 0))
+            # pin the flash-decoding layout: cache seq dim model-sharded,
+            # batch data-sharded (GSPMD otherwise reshards the whole cache
+            # to kv-head sharding per layer — §Perf it.10)
+            spec = {0: "batch", 1: "model"}
+            kc = shard_dims(kc, spec)
+            vc = shard_dims(vc, spec)
+            k, v = kc, vc
+            new_cache = {"k": kc, "v": vc, "pos": idx + x.shape[1]}
+        else:  # cross-attention: cache holds precomputed enc k/v
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+    w = attention_scores(q, k, cfg, mask)     # (B,KV,G,Sq,Sk)
+    y = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    y = y.reshape(b, y.shape[1], h * dh)
+    return L.apply_linear(params["wo"], y, cfg=mpo), new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnCfg, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.array(0, jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / squared-ReLU)
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, mpo: MPOConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": L.init_linear(k1, d_model, d_ff, cfg=mpo, kind="ffn",
+                               out_axis="ffn", sharded_out=True),
+         "w_down": L.init_linear(k2, d_ff, d_model, cfg=mpo, kind="ffn",
+                                 in_axis="ffn", sharded_in=True,
+                                 scale=d_ff ** -0.5)}
+    if act in ("silu", "gelu"):  # gated variants (SwiGLU / GeGLU)
+        p["w_gate"] = L.init_linear(k3, d_model, d_ff, cfg=mpo, kind="ffn",
+                                    out_axis="ffn", sharded_out=True)
+    return p
+
+
+def apply_mlp(params, x, act: str, mpo: MPOConfig):
+    up = L.apply_linear(params["w_up"], x, cfg=mpo)
+    if act == "silu":
+        g = L.apply_linear(params["w_gate"], x, cfg=mpo)
+        h = jax.nn.silu(g) * up
+    elif act == "gelu":
+        g = L.apply_linear(params["w_gate"], x, cfg=mpo)
+        h = jax.nn.gelu(g) * up
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif act == "gelu_plain":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    return L.apply_linear(params["w_down"], h, cfg=mpo)
+
+
+# --------------------------------------------------------------------------
+# stacking for lax.scan
+# --------------------------------------------------------------------------
+
+
+def stack_layers(init_fn, key, n_layers: int):
+    """vmap an ``init_fn(key) -> Annot tree`` into scan-stacked params."""
+    keys = jax.random.split(key, n_layers)
+    tree0 = init_fn(keys[0])
+    _, axes = L.split_annotations(tree0)
+    stacked = jax.vmap(lambda k: L.split_annotations(init_fn(k))[0])(keys)
+    is_tup = lambda x: isinstance(x, tuple)
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes, is_leaf=is_tup)
+    return jax.tree.map(lambda v, a: Annot(v, a), stacked, axes,
+                        is_leaf=lambda x: hasattr(x, "shape"))

@@ -1,0 +1,242 @@
+"""Decoder-only transformer LM — covers the dense / MoE / VLM families.
+
+Layer stack is ``lax.scan``-compiled (compile time + HLO size at 48L/400B
+scale); per-layer variation (gemma2 local/global alternation) rides in as a
+scanned ``is_local`` flag.  VLM configs prepend projected patch embeddings
+(the modality frontend itself is a stub per the assignment).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import layers as L
+from repro.models import nn
+from repro.models.moe import apply_moe, init_moe
+
+
+def attn_cfg(cfg: ModelConfig) -> nn.AttnCfg:
+    return nn.AttnCfg(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        attn_softcap=cfg.attn_softcap)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig):
+    ka, km, _ = jax.random.split(key, 3)
+    p = {"ln1": nn.init_rmsnorm(cfg.d_model),
+         "ln2": nn.init_rmsnorm(cfg.d_model),
+         "attn": nn.init_attention(ka, attn_cfg(cfg), cfg.mpo)}
+    if cfg.num_experts:
+        p["moe"] = init_moe(km, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                            cfg.mlp_act, cfg.mpo)
+    else:
+        p["mlp"] = nn.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp_act, cfg.mpo)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_layers, k_proj = jax.random.split(key, 3)
+    params = {
+        "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model,
+                                  cfg=cfg.mpo),
+        "layers": nn.stack_layers(lambda k: init_layer(k, cfg), k_layers,
+                                  cfg.num_layers),
+        "final_norm": nn.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "vlm":
+        params["projector"] = L.init_linear(
+            k_proj, cfg.frontend_dim, cfg.d_model, cfg=L.DENSE,
+            in_axis=None, out_axis=None)
+    if cfg.share_layers:  # ALBERT-style: one layer scanned num_layers times
+        params["layers"] = nn.stack_layers(lambda k: init_layer(k, cfg),
+                                           k_layers, 1)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(
+            k_proj, cfg.d_model, cfg.vocab_size, cfg=cfg.mpo, kind="embed",
+            out_axis="vocab", sharded_out=True)
+    if cfg.num_classes:
+        params["cls_head"] = L.init_linear(
+            k_proj, cfg.d_model, cfg.num_classes, cfg=L.DENSE)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _is_local_flags(cfg: ModelConfig) -> jax.Array:
+    if cfg.local_window is None:
+        return jnp.zeros((cfg.num_layers,), bool)
+    return (jnp.arange(cfg.num_layers) % 2) == 0  # even layers local
+
+
+def _layer_fwd(cfg: ModelConfig, x, layer, *, positions, mask, mask_local,
+               cache=None):
+    acfg = attn_cfg(cfg)
+    is_local = layer.pop("_is_local") if "_is_local" in layer else None
+    m = mask if is_local is None else jnp.where(is_local, mask_local, mask)
+    from repro.parallel import ctx
+    h = nn.apply_rmsnorm(layer["ln1"], x)
+    a, new_cache = nn.apply_attention(layer["attn"], h, acfg, cfg.mpo,
+                                      positions=positions, mask=m, cache=cache)
+    x = ctx.shard_activation(x + a)
+    h = nn.apply_rmsnorm(layer["ln2"], x)
+    if cfg.num_experts:
+        f, aux = apply_moe(layer["moe"], h, act=cfg.mlp_act, mpo=cfg.mpo,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor)
+    else:
+        f, aux = nn.apply_mlp(layer["mlp"], h, cfg.mlp_act, cfg.mpo), 0.0
+    return ctx.shard_activation(x + f), new_cache, aux
+
+
+def _run_stack(cfg: ModelConfig, params, x, *, positions, mask, mask_local,
+               caches=None):
+    """Scan the layer stack; returns (x, new_caches, aux_loss_sum)."""
+    flags = _is_local_flags(cfg)
+
+    def body(carry, scanned):
+        x, aux_sum = carry
+        layer, flag, cache = scanned
+        layer = dict(layer)
+        if cfg.local_window is not None:
+            layer["_is_local"] = flag
+        y, new_cache, aux = _layer_fwd(cfg, x, layer, positions=positions,
+                                       mask=mask, mask_local=mask_local,
+                                       cache=cache)
+        return (y, aux_sum + aux), new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    layer_params = params["layers"]
+    if cfg.share_layers:  # broadcast the single shared layer across the scan
+        layer_params = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[0], (cfg.num_layers,) + a.shape[1:]),
+            layer_params)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.array(0.0, jnp.float32)),
+        (layer_params, flags, caches))
+    return x, new_caches, aux
+
+
+def _logits(cfg: ModelConfig, params, x):
+    if cfg.tie_embeddings:
+        logits = L.apply_logits(params["embed"], x, cfg=cfg.mpo)
+    else:
+        logits = L.apply_linear(params["lm_head"], x, cfg=cfg.mpo)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    """Token (+ optional patch) embeddings -> (B, S, D)."""
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = x * (cfg.d_model ** 0.5) if cfg.name.startswith("gemma") else x
+    if cfg.family == "vlm" and "patches" in batch:
+        p = batch["patches"] @ params["projector"]["w"]
+        x = jnp.concatenate([p.astype(x.dtype), x], axis=1)
+    from repro.parallel import ctx
+    return ctx.shard_activation(x.astype(cfg.jnp_dtype))
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """Teacher-forced forward up to the final norm -> (hidden, aux_loss)."""
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    if cfg.causal:
+        mask = nn.causal_mask(s, s)
+    else:  # encoder (BERT/ALBERT analog): full bidirectional attention
+        mask = jnp.ones((1, 1, s, s), bool)
+    mask_local = nn.causal_mask(s, s, window=cfg.local_window)
+    x, _, aux = _run_stack(cfg, params, x, positions=positions, mask=mask,
+                           mask_local=mask_local, caches=None)
+    return nn.apply_rmsnorm(params["final_norm"], x), aux
+
+
+def logits_head(params, hidden, cfg: ModelConfig):
+    return _logits(cfg, params, hidden)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Teacher-forced forward -> (logits, aux_loss)."""
+    hidden, aux = forward_hidden(params, batch, cfg)
+    return _logits(cfg, params, hidden), aux
+
+
+def forward_cls(params, batch, cfg: ModelConfig):
+    """Sequence classification (paper's GLUE-analog): pool first token."""
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    mask = nn.causal_mask(s, s) if cfg.causal else jnp.ones((1, 1, s, s), bool)
+    mask_local = nn.causal_mask(s, s, window=cfg.local_window)
+    x, _, aux = _run_stack(cfg, params, x, positions=positions, mask=mask,
+                           mask_local=mask_local, caches=None)
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    pooled = x[:, 0]
+    return L.apply_linear(params["cls_head"], pooled, cfg=L.DENSE), aux
+
+
+# --------------------------------------------------------------------------
+# serving (prefill / decode with per-layer KV caches)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    acfg = attn_cfg(cfg)
+    shape = (cfg.num_layers, batch, max_len, acfg.num_kv_heads, acfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((cfg.num_layers,), jnp.int32)}
+
+
+def prefill(params, batch, cache, cfg: ModelConfig):
+    """Fill KV caches with the prompt; returns (last_logits, cache)."""
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    max_len = cache["k"].shape[2]
+    positions = jnp.arange(s)[None, :]
+    mask = nn.causal_mask(s, max_len)
+    mask_local = nn.causal_mask(s, max_len, window=cfg.local_window)
+    x, new_caches, _ = _run_stack(cfg, params, x, positions=positions,
+                                  mask=mask, mask_local=mask_local,
+                                  caches=cache)
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    return _logits(cfg, params, x[:, -1:]), new_caches
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    """One-token decode against a filled cache.  tokens: (B, 1)."""
+    x = _embed_inputs(cfg, params, {"tokens": tokens})
+    max_len = cache["k"].shape[2]
+    pos = cache["pos"][0]
+    positions = pos + jnp.zeros((1, 1), jnp.int32)
+    kj = jnp.arange(max_len)[None, :]
+    mask = (kj <= pos)[None, None]
+    if cfg.local_window is not None:
+        mask_local = mask & (kj > pos - cfg.local_window)[None, None]
+    else:
+        mask_local = mask
+    x, new_caches, _ = _run_stack(cfg, params, x, positions=positions,
+                                  mask=mask, mask_local=mask_local,
+                                  caches=cache)
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    return _logits(cfg, params, x), new_caches

@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment the audio frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, frontend_len, d_model) directly.  Learned
+positional embeddings, pre-LN blocks, cross-attention decoder.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import layers as L
+from repro.core.layers import Annot
+from repro.models import nn
+
+
+def _acfg(cfg: ModelConfig, causal: bool) -> nn.AttnCfg:
+    return nn.AttnCfg(d_model=cfg.d_model, num_heads=cfg.num_heads,
+                      num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                      use_rope=False, causal=causal)
+
+
+def init_enc_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {"ln1": nn.init_layernorm(cfg.d_model),
+            "attn": nn.init_attention(ka, _acfg(cfg, False), cfg.mpo),
+            "ln2": nn.init_layernorm(cfg.d_model),
+            "mlp": nn.init_mlp(km, cfg.d_model, cfg.d_ff, "gelu_plain",
+                               cfg.mpo)}
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    ka, kc, km = jax.random.split(key, 3)
+    return {"ln1": nn.init_layernorm(cfg.d_model),
+            "attn": nn.init_attention(ka, _acfg(cfg, True), cfg.mpo),
+            "ln_x": nn.init_layernorm(cfg.d_model),
+            "xattn": nn.init_attention(kc, _acfg(cfg, False), cfg.mpo),
+            "ln2": nn.init_layernorm(cfg.d_model),
+            "mlp": nn.init_mlp(km, cfg.d_model, cfg.d_ff, "gelu_plain", cfg.mpo)}
+
+
+def init(key, cfg: ModelConfig):
+    ke, kd, kt, kp1, kp2 = jax.random.split(key, 5)
+    return {
+        "embed": L.init_embedding(kt, cfg.vocab_size, cfg.d_model,
+                                  cfg=cfg.mpo),
+        "enc_pos": Annot(0.02 * jax.random.normal(
+            kp1, (cfg.frontend_len, cfg.d_model), jnp.float32),
+            (None, "embed")),
+        "dec_pos": Annot(0.02 * jax.random.normal(
+            kp2, (cfg.max_pos, cfg.d_model), jnp.float32),
+            (None, "embed")),
+        "encoder": nn.stack_layers(lambda k: init_enc_layer(k, cfg), ke,
+                                   cfg.num_enc_layers),
+        "decoder": nn.stack_layers(lambda k: init_dec_layer(k, cfg), kd,
+                                   cfg.num_layers),
+        "enc_norm": nn.init_layernorm(cfg.d_model),
+        "final_norm": nn.init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, F, D) stub embeddings -> encoder output."""
+    x = frames.astype(cfg.jnp_dtype) + params["enc_pos"][None].astype(cfg.jnp_dtype)
+    sf = x.shape[1]
+    mask = jnp.ones((1, 1, sf, sf), bool)
+    positions = jnp.arange(sf)[None, :]
+
+    def body(x, layer):
+        h = nn.apply_layernorm(layer["ln1"], x)
+        a, _ = nn.apply_attention(layer["attn"], h, _acfg(cfg, False),
+                                  cfg.mpo, positions=positions, mask=mask)
+        x = x + a
+        h = nn.apply_layernorm(layer["ln2"], x)
+        return x + nn.apply_mlp(layer["mlp"], h, "gelu_plain", cfg.mpo), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return nn.apply_layernorm(params["enc_norm"], x)
+
+
+def _dec_stack(cfg, params, x, enc_out, *, positions, mask, caches=None):
+    sf = enc_out.shape[1]
+    xmask = jnp.ones((1, 1, x.shape[1], sf), bool)
+
+    def body(carry, scanned):
+        x = carry
+        layer, cache = scanned
+        h = nn.apply_layernorm(layer["ln1"], x)
+        self_cache = None if cache is None else cache["self"]
+        a, new_self = nn.apply_attention(layer["attn"], h, _acfg(cfg, True),
+                                         cfg.mpo, positions=positions,
+                                         mask=mask, cache=self_cache)
+        x = x + a
+        h = nn.apply_layernorm(layer["ln_x"], x)
+        a, _ = nn.apply_attention(layer["xattn"], h, _acfg(cfg, False),
+                                  cfg.mpo, positions=positions, mask=xmask,
+                                  kv_x=enc_out)
+        x = x + a
+        h = nn.apply_layernorm(layer["ln2"], x)
+        x = x + nn.apply_mlp(layer["mlp"], h, "gelu_plain", cfg.mpo)
+        new_cache = None if cache is None else {"self": new_self}
+        return x, new_cache
+
+    if cfg.remat and caches is None:
+        body = jax.checkpoint(body)
+    x, new_caches = jax.lax.scan(body, x, (params["decoder"], caches))
+    return x, new_caches
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """batch: {frames: (B,F,D), tokens: (B,S)} -> (hidden, 0)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tok = batch["tokens"]
+    s = tok.shape[1]
+    x = L.apply_embedding(params["embed"], tok, cfg=cfg.mpo,
+                            dtype=cfg.jnp_dtype)
+    x = x + params["dec_pos"][:s][None].astype(cfg.jnp_dtype)
+    positions = jnp.arange(s)[None, :]
+    mask = nn.causal_mask(s, s)
+    x, _ = _dec_stack(cfg, params, x, enc_out, positions=positions, mask=mask)
+    return nn.apply_layernorm(params["final_norm"], x), jnp.float32(0)
+
+
+def logits_head(params, hidden, cfg: ModelConfig):
+    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    hidden, aux = forward_hidden(params, batch, cfg)
+    return logits_head(params, hidden, cfg), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"self": {"k": jnp.zeros(shape, dtype),
+                     "v": jnp.zeros(shape, dtype),
+                     "pos": jnp.zeros((cfg.num_layers,), jnp.int32)},
+            "enc_out": jnp.zeros((batch, cfg.frontend_len, cfg.d_model),
+                                 dtype)}
+
+
+def prefill(params, batch, cache, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    tok = batch["tokens"]
+    s = tok.shape[1]
+    max_len = cache["self"]["k"].shape[2]
+    x = L.apply_embedding(params["embed"], tok, cfg=cfg.mpo,
+                            dtype=cfg.jnp_dtype)
+    x = x + params["dec_pos"][:s][None].astype(cfg.jnp_dtype)
+    positions = jnp.arange(s)[None, :]
+    mask = nn.causal_mask(s, max_len)
+    x, new_self = _dec_stack(cfg, params, x, enc_out, positions=positions,
+                             mask=mask, caches={"self": cache["self"]})
+    x = nn.apply_layernorm(params["final_norm"], x)
+    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo)
+    return logits, {"self": new_self["self"], "enc_out": enc_out.astype(cache["enc_out"].dtype)}
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    enc_out = cache["enc_out"].astype(cfg.jnp_dtype)
+    max_len = cache["self"]["k"].shape[2]
+    pos = cache["self"]["pos"][0]
+    x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo,
+                            dtype=cfg.jnp_dtype)
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)
+    x = x + pos_emb[None].astype(cfg.jnp_dtype)
+    positions = pos + jnp.zeros((1, 1), jnp.int32)
+    mask = (jnp.arange(max_len)[None, :] <= pos)[None, None]
+    x, new_self = _dec_stack(cfg, params, x, enc_out, positions=positions,
+                             mask=mask, caches={"self": cache["self"]})
+    x = nn.apply_layernorm(params["final_norm"], x)
+    return L.apply_logits(params["embed"], x, cfg=cfg.mpo), \
+        {"self": new_self["self"], "enc_out": cache["enc_out"]}

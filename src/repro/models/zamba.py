@@ -1,0 +1,176 @@
+"""Zamba2-style hybrid: scanned Mamba2 blocks + *shared* attention blocks.
+
+The assigned config (81L) is organized as ``attn_every`` Mamba blocks per
+segment with one of ``num_shared_attn`` parameter-shared attention blocks
+applied at each segment boundary (alternating), following the Zamba2 design
+of a small number of shared transformer blocks re-applied periodically.
+Segments are equal-sized (num_layers is padded up to a multiple of
+``attn_every`` at config level — 81 = 9 x 9 here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import layers as L
+from repro.models import nn, transformer
+from repro.models.mamba import (apply_mamba_block, init_mamba_block,
+                                init_ssm_state)
+
+
+def _num_segments(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.attn_every == 0, \
+        f"{cfg.num_layers} % {cfg.attn_every}"
+    return cfg.num_layers // cfg.attn_every
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_m, k_a = jax.random.split(key, 3)
+    def shared_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln": nn.init_rmsnorm(cfg.d_model),
+                "attn": nn.init_attention(k1, transformer.attn_cfg(cfg),
+                                          cfg.mpo),
+                "ln2": nn.init_rmsnorm(cfg.d_model),
+                "mlp": nn.init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu_plain",
+                                   cfg.mpo)}
+
+    shared = nn.stack_layers(shared_block, k_a, cfg.num_shared_attn)
+    return {
+        "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model,
+                                  cfg=cfg.mpo),
+        "mamba": nn.stack_layers(lambda k: init_mamba_block(k, cfg), k_m,
+                                 cfg.num_layers),
+        "shared_attn": shared,
+        "final_norm": nn.init_rmsnorm(cfg.d_model),
+    }
+
+
+def _shared_attn_fwd(cfg, shared, idx, x, *, positions, mask, cache=None):
+    """Apply shared transformer block ``idx % num_shared`` (gathered slice):
+    attention + MLP (the config's d_ff), parameter-shared across segments."""
+    block = jax.tree.map(lambda a: a[idx % cfg.num_shared_attn], shared)
+    h = nn.apply_rmsnorm(block["ln"], x)
+    a, new_cache = nn.apply_attention(block["attn"], h, transformer.attn_cfg(cfg),
+                                      cfg.mpo, positions=positions, mask=mask,
+                                      cache=cache)
+    x = x + a
+    h = nn.apply_rmsnorm(block["ln2"], x)
+    x = x + nn.apply_mlp(block["mlp"], h, "gelu_plain", cfg.mpo)
+    return x, new_cache
+
+
+def _stack(cfg: ModelConfig, params, x, *, positions, mask,
+           ssm_states=None, kv_caches=None, decode: bool = False):
+    """Segmented run: [shared-attn, scan(attn_every mamba blocks)] x S."""
+    nseg = _num_segments(cfg)
+    per = cfg.attn_every
+    new_kv = {"k": [], "v": [], "pos": []} if kv_caches is not None else None
+    new_states = [] if decode else None
+
+    def mamba_seg(x, scanned):
+        if decode:
+            layer, st = scanned
+            y, new_st = apply_mamba_block(layer, x, cfg, state=st, decode=True)
+            return y, new_st
+        layer = scanned
+        y, fstate = apply_mamba_block(layer, x, cfg)
+        return y, fstate
+
+    body = mamba_seg
+    if cfg.remat and not decode:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    final_states = []
+    for s in range(nseg):
+        kv_c = None
+        if kv_caches is not None:
+            kv_c = jax.tree.map(lambda a: a[s], kv_caches)
+        x, kv_out = _shared_attn_fwd(cfg, params["shared_attn"], s, x,
+                                     positions=positions, mask=mask,
+                                     cache=kv_c)
+        if kv_caches is not None:
+            for key in ("k", "v", "pos"):
+                new_kv[key].append(kv_out[key])
+        seg_params = jax.tree.map(lambda a: a[s * per:(s + 1) * per],
+                                  params["mamba"])
+        if decode:
+            seg_states = jax.tree.map(lambda a: a[s * per:(s + 1) * per],
+                                      ssm_states)
+            x, seg_new = jax.lax.scan(body, x, (seg_params, seg_states))
+            new_states.append(seg_new)
+        else:
+            x, fst = jax.lax.scan(body, x, seg_params)
+            final_states.append(fst)
+
+    out_kv = None
+    if kv_caches is not None:
+        out_kv = {k: jnp.stack(v) for k, v in new_kv.items()}
+    out_states = None
+    if decode:
+        out_states = jnp.concatenate(new_states, axis=0)
+    elif final_states:
+        out_states = jnp.concatenate(final_states, axis=0)
+    return x, out_states, out_kv
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = x.astype(cfg.jnp_dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    mask = nn.causal_mask(s, s)
+    x, _, _ = _stack(cfg, params, x, positions=positions, mask=mask)
+    return nn.apply_rmsnorm(params["final_norm"], x), jnp.float32(0)
+
+
+def logits_head(params, hidden, cfg: ModelConfig):
+    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    hidden, aux = forward_hidden(params, batch, cfg)
+    return logits_head(params, hidden, cfg), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    nseg = _num_segments(cfg)
+    shape = (nseg, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "kv": {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+               "pos": jnp.zeros((nseg,), jnp.int32)},
+        "ssm": init_ssm_state(cfg, batch),
+    }
+
+
+def prefill(params, batch, cache, cfg: ModelConfig):
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = x.astype(cfg.jnp_dtype)
+    s = x.shape[1]
+    max_len = cache["kv"]["k"].shape[2]
+    positions = jnp.arange(s)[None, :]
+    mask = nn.causal_mask(s, max_len)
+    x, states, kv = _stack(cfg, params, x, positions=positions, mask=mask,
+                           kv_caches=cache["kv"])
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo)
+    return logits, {"kv": kv, "ssm": states}
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = x.astype(cfg.jnp_dtype)
+    max_len = cache["kv"]["k"].shape[2]
+    pos = cache["kv"]["pos"][0]
+    positions = pos + jnp.zeros((1, 1), jnp.int32)
+    mask = (jnp.arange(max_len)[None, :] <= pos)[None, None]
+    x, states, kv = _stack(cfg, params, x, positions=positions, mask=mask,
+                           ssm_states=cache["ssm"], kv_caches=cache["kv"],
+                           decode=True)
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    return L.apply_logits(params["embed"], x, cfg=cfg.mpo), \
+        {"kv": kv, "ssm": states}

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (adafactor, adamw, sgdm,  # noqa: F401
+                                    OptState, Optimizer)
+from repro.optim.schedule import cosine_warmup, constant  # noqa: F401
+from repro.optim.compress import (ef_int8, ef_topk,  # noqa: F401
+                                  wrap_compression)

@@ -1,0 +1,81 @@
+"""Error-feedback gradient compression for cross-pod reduction.
+
+Implements EF-int8 (stochastic-rounding-free, per-tensor scale) and EF-top-k.
+The compressor runs *before* the optimizer: the update consumes the
+dequantized gradient; the quantization residual is fed back next step
+(Seide et al. 1-bit SGD / EF-SGD), which preserves convergence.
+
+At 512+ chips the pod-level all-reduce of int8 grads is 4x fewer bytes than
+fp32 (2x vs bf16); with LFA masking (frozen central tensors contribute no
+gradient traffic at all) the combined reduction is ~25-40x (EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import FROZEN, Optimizer, OptState
+
+
+class CompressState(NamedTuple):
+    error: any          # residual pytree
+    inner: OptState
+
+
+def _q_int8(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_int8(g, err):
+    """(compressed-then-decompressed grad, new residual)."""
+    g32 = g.astype(jnp.float32) + err
+    q, scale = _q_int8(g32)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g32 - deq
+
+
+def ef_topk(g, err, frac: float = 0.01):
+    g32 = g.astype(jnp.float32) + err
+    flat = g32.reshape(-1)
+    k = max(1, int(frac * flat.shape[0]))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    deq = kept.reshape(g32.shape)
+    return deq, g32 - deq
+
+
+def wrap_compression(opt: Optimizer, *, kind: str = "int8",
+                     topk_frac: float = 0.01, mask=None) -> Optimizer:
+    """Wrap an optimizer so gradients pass through EF compression first."""
+
+    def comp(g, e):
+        if kind == "int8":
+            return ef_int8(g, e)
+        return ef_topk(g, e, topk_frac)
+
+    def init(params):
+        inner = opt.init(params)
+        m = mask if mask is not None else jax.tree.map(lambda _: True, params)
+        err = jax.tree.map(
+            lambda p, t: jnp.zeros(p.shape, jnp.float32) if t else FROZEN,
+            params, m)
+        return CompressState(err, inner)
+
+    def update(grads, state, params):
+        m = mask if mask is not None else jax.tree.map(lambda _: True, params)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(state.error)
+        flat_m = jax.tree.leaves(m)
+        outs = [comp(g, e) if t else (g, FROZEN)
+                for g, e, t in zip(flat_g, flat_e, flat_m)]
+        new_g = treedef.unflatten([o[0] for o in outs])
+        new_e = treedef.unflatten([o[1] for o in outs])
+        new_params, new_inner = opt.update(new_g, state.inner, params)
+        return new_params, CompressState(new_e, new_inner)
+
+    return Optimizer(init, update)

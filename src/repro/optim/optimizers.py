@@ -1,0 +1,183 @@
+"""Pure-JAX optimizers with trainability masks (the paper's LFA hook).
+
+Masked-out leaves (the frozen central tensors under lightweight fine-tuning)
+allocate **no optimizer state** and receive **no updates** — this is how the
+paper's "91% fewer fine-tuned parameters" becomes a memory and gradient-
+traffic win at scale (DESIGN §3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any          # per-leaf state pytree (None leaves for frozen params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable      # params -> OptState
+    update: Callable    # (grads, state, params) -> (new_params, new_state)
+
+
+class _Frozen:
+    """Sentinel for masked params: an *empty* pytree node (zero leaves), so
+    optimizer states holding it remain valid jit inputs."""
+    def __repr__(self):
+        return "Frozen"
+
+
+jax.tree_util.register_pytree_node(
+    _Frozen, lambda f: ((), None), lambda aux, ch: FROZEN)
+
+FROZEN = _Frozen()
+
+
+def _mask_tree(params, mask):
+    if mask is None:
+        return jax.tree.map(lambda _: True, params)
+    return mask
+
+
+def adamw(lr: Callable | float, *, b1=0.9, b2=0.999, eps=1e-8,
+          weight_decay=0.0, mask=None, state_dtype=jnp.float32,
+          grad_clip: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        m = _mask_tree(params, mask)
+        inner = jax.tree.map(
+            lambda p, t: {"mu": jnp.zeros(p.shape, state_dtype),
+                          "nu": jnp.zeros(p.shape, state_dtype)} if t else FROZEN,
+            params, m, is_leaf=lambda x: x is FROZEN)
+        return OptState(jnp.zeros((), jnp.int32), inner)
+
+    def update(grads, state, params):
+        m = _mask_tree(params, mask)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if grad_clip is not None:
+            leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g, t in zip(jax.tree.leaves(grads),
+                                      jax.tree.leaves(m)) if t]
+            gnorm = jnp.sqrt(sum(leaves))
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        else:
+            scale = 1.0
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, s, t):
+            if not t:
+                return p, FROZEN
+            g = g.astype(jnp.float32) * scale
+            mu = b1 * s["mu"] + (1 - b1) * g
+            nu = b2 * s["nu"] + (1 - b2) * g * g
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, {"mu": mu.astype(state_dtype),
+                           "nu": nu.astype(state_dtype)}
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = treedef.flatten_up_to(state.inner)
+        flat_m = jax.tree.leaves(m)
+        outs = [upd(p, g, s, t) for p, g, s, t in
+                zip(flat_p, flat_g, flat_s, flat_m)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_inner = treedef.unflatten([o[1] for o in outs])
+        return new_params, OptState(step, new_inner)
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable | float, *, eps=1e-30, clip=1.0, mask=None,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Memory-efficient second-moment factorization (Shazeer & Stern)."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        m = _mask_tree(params, mask)
+
+        def one(p, t):
+            if not t:
+                return FROZEN
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(one, params, m, is_leaf=lambda x: x is FROZEN))
+
+    def update(grads, state, params):
+        m = _mask_tree(params, mask)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+        def upd(p, g, s, t):
+            if not t:
+                return p, FROZEN
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms_r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = g * jax.lax.rsqrt(rms_r)[..., None] * jax.lax.rsqrt(vc)[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            u = u / jnp.maximum(1.0, jnp.sqrt(jnp.mean(u * u)) / clip)
+            u = u + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        outs = [upd(p, g, s, t) for p, g, s, t in
+                zip(flat_p, jax.tree.leaves(grads),
+                    treedef.flatten_up_to(state.inner), jax.tree.leaves(m))]
+        return (treedef.unflatten([o[0] for o in outs]),
+                OptState(step, treedef.unflatten([o[1] for o in outs])))
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: Callable | float, *, momentum=0.9, mask=None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        m = _mask_tree(params, mask)
+        return OptState(jnp.zeros((), jnp.int32), jax.tree.map(
+            lambda p, t: jnp.zeros(p.shape, jnp.float32) if t else FROZEN,
+            params, m, is_leaf=lambda x: x is FROZEN))
+
+    def update(grads, state, params):
+        m = _mask_tree(params, mask)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s, t):
+            if not t:
+                return p, FROZEN
+            v = momentum * s + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * v).astype(p.dtype), v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        outs = [upd(p, g, s, t) for p, g, s, t in
+                zip(flat_p, jax.tree.leaves(grads),
+                    treedef.flatten_up_to(state.inner), jax.tree.leaves(m))]
+        return (treedef.unflatten([o[0] for o in outs]),
+                OptState(step, treedef.unflatten([o[1] for o in outs])))
+
+    return Optimizer(init, update)

@@ -1,0 +1,110 @@
+"""Mesh-context-aware activation sharding constraints.
+
+Model code calls ``shard_batch_dim(x, dim)`` at propagation-ambiguous points
+(factorized embedding gathers, dispatch einsums).  When a mesh has been
+installed via ``with current_mesh(mesh):`` this emits a
+``with_sharding_constraint`` pinning the token/batch dim to the
+("pod","data") axes; with no mesh installed (CPU smoke tests) it's a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+_SP = False  # sequence-parallel activation layout (DESIGN §4 / §Perf it.15)
+
+
+@contextlib.contextmanager
+def current_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev
+
+
+@contextlib.contextmanager
+def sequence_parallel(enabled: bool = True):
+    global _SP
+    prev = _SP
+    _SP = enabled
+    try:
+        yield
+    finally:
+        _SP = prev
+
+
+def get_mesh():
+    return _MESH
+
+
+def is_sp() -> bool:
+    return _SP
+
+
+def shard_activation(x):
+    """(B, S, ...) hidden states: batch over (pod,data); in SP mode the seq
+    dim additionally over `model` (weights are replicated instead — the
+    MPO-compressed weights are small enough to replicate, which is the
+    compression-enables-SP argument of DESIGN §4)."""
+    if _MESH is None:
+        return x
+    spec = {0: "batch"}
+    if _SP and x.ndim >= 3:
+        spec[1] = "model"
+    return shard_dims(x, spec)
+
+
+def gather_seq(x):
+    """In SP mode: force a tensor to be seq-replicated (e.g. K/V before the
+    attention contraction) — emits the single all-gather SP pays per layer."""
+    if _MESH is None or not _SP:
+        return x
+    return shard_dims(x, {0: "batch"})
+
+
+def shard_batch_dim(x, dim: int = 0):
+    mesh = _MESH
+    if mesh is None:
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not axes:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = math.prod(sizes[a] for a in axes)
+    if x.shape[dim] % total != 0:
+        return x
+    parts = [None] * x.ndim
+    parts[dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def shard_dims(x, spec: dict):
+    """Constrain several dims at once, e.g. {1: "batch", 2: "model"}.
+    "batch" expands to the (pod, data) axes; any non-divisible dim is
+    silently dropped (mesh-agnostic model code)."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    parts = [None] * x.ndim
+    for dim, what in spec.items():
+        if what == "batch":
+            if batch_axes and x.shape[dim] % math.prod(
+                    sizes[a] for a in batch_axes) == 0:
+                parts[dim] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        elif what in sizes and x.shape[dim] % sizes[what] == 0:
+            parts[dim] = what
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter carries a tuple of logical axis names (from its ``Annot``).
+``make_rules(mesh)`` maps logical names -> mesh axes; ``tree_shardings``
+resolves a whole axes-tree into ``NamedSharding``s, silently falling back to
+replication for any dim whose size doesn't divide the mesh-axis product
+(e.g. qwen3's 40 heads over model=16 — see DESIGN §4).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True, sp: bool = False) -> dict:
+    """logical axis name -> tuple of mesh axis names.
+
+    ``sp=True`` switches to the sequence-parallel layout: weights are
+    REPLICATED over `model` (MPO compression makes them small enough) and
+    the `model` axis shards the activations' sequence dim instead — chosen
+    for archs whose head counts don't divide the mesh (DESIGN §4).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if multi_pod else ("data",)
+    tp = None if sp else ("model",)
+    rules = {
+        # ---- parameters ----
+        "vocab": tp,
+        "qkv": tp,               # flattened H*Dh projection dim
+        "kv_qkv": tp,            # flattened KV*Dh projection dim
+        "ffn": tp,
+        "expert": ("model",),    # expert-parallel MoE (kept even under SP)
+        "embed": ("data",) if fsdp else None,   # ZeRO-style param shard
+        "bond": ("data",) if fsdp else None,    # central-core bond (FSDP)
+        "layers": None,          # scan axis
+        # ---- activations ----
+        "batch": batch,
+        "heads": tp,
+        "act_seq": ("model",) if sp else None,
+        "act_embed": None,
+    }
+    return rules
+
+
+def spec_for(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> P:
+    """PartitionSpec with per-dim divisibility fallback."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        prod = math.prod(sizes[a] for a in mesh_axes)
+        if dim % prod != 0 or any(a in used for a in mesh_axes):
+            parts.append(None)  # fallback: replicate this dim
+            continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    # trim trailing Nones (canonical form)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules: dict):
+    """NamedSharding tree from (axes tuples, ShapeDtypeStructs)."""
+    is_tup = lambda x: isinstance(x, tuple) or x is None
+
+    def one(axes, sd):
+        if axes is None:
+            axes = (None,) * len(sd.shape)
+        return NamedSharding(mesh, spec_for(axes, sd.shape, rules, mesh))
+
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=is_tup)
+
+
+def batch_sharding(batch_specs, mesh: Mesh, rules: dict):
+    """Inputs: shard dim 0 (global batch) over the batch mesh axes, with the
+    same divisibility fallback as params (batch=1 decode -> replicate)."""
+    b = rules["batch"]
+    b = (b,) if isinstance(b, str) else b
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    prod = math.prod(sizes[a] for a in b)
+
+    def one(sd):
+        if not sd.shape or sd.shape[0] % prod != 0:
+            return NamedSharding(mesh, P())
+        first = b if len(b) > 1 else b[0]
+        return NamedSharding(mesh, P(first, *([None] * (len(sd.shape) - 1))))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_sharding(cache_specs, mesh: Mesh, rules: dict):
+    """Decode caches: batch dim is dim 1 (dim 0 = layers) for stacked caches,
+    heads/kv dims sharded over model when divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b = rules["batch"]
+    b = (b,) if isinstance(b, str) else b
+    bprod = math.prod(sizes[a] for a in b)
+    mprod = sizes.get("model", 1)
+
+    def one(sd):
+        shape = sd.shape
+        parts = [None] * len(shape)
+        if len(shape) >= 5:
+            # (L, B, S, KV, Dh) kv-cache or (L, B, H, N, P) ssm state:
+            # batch on the data axes; model axis on the LARGEST divisible
+            # inner dim — for KV caches that is the sequence dim
+            # (flash-decoding layout: attention reduces over the sharded
+            # seq with small partial-softmax collectives instead of
+            # gathering the cache; §Perf it.10), for SSM states the heads.
+            if shape[1] % bprod == 0:
+                parts[1] = b if len(b) > 1 else b[0]
+            inner = [(shape[i], i) for i in range(2, len(shape) - 1)
+                     if shape[i] % mprod == 0]
+            if inner:
+                parts[max(inner)[1]] = "model"
+        elif len(shape) >= 2:
+            if shape[0] % bprod == 0:
+                parts[0] = b if len(b) > 1 else b[0]
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_specs)
+
+
+def constrain(x, mesh: Mesh, rules: dict, names: tuple):
+    """with_sharding_constraint by logical activation names."""
+    spec = spec_for(names, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,57 @@
+"""Fault-tolerant training loop: checkpoint/resume, deterministic data,
+metrics logging.  Single-host here; the SPMD step itself is mesh-agnostic."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.train.steps import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    log_every: int = 10
+    keep: int = 3
+
+
+def run_training(train_step: Callable, state: TrainState,
+                 batch_fn: Callable, loop: LoopConfig,
+                 to_device: Callable = lambda b: b,
+                 log_fn: Callable = print):
+    """Runs ``loop.steps`` steps, resuming from the latest checkpoint if one
+    exists.  ``batch_fn(step)`` must be deterministic (restart-safe)."""
+    mgr = None
+    start = 0
+    if loop.ckpt_dir:
+        mgr = CheckpointManager(loop.ckpt_dir, keep=loop.keep)
+        latest = mgr.latest_step()
+        if latest is not None:
+            state, meta = mgr.restore(latest, state)
+            start = meta["step"]
+            log_fn(f"[loop] resumed from step {start}")
+
+    history = []
+    t0 = time.time()
+    for step in range(start, loop.steps):
+        batch = to_device(batch_fn(step))
+        state, metrics = train_step(state, batch)
+        if (step + 1) % loop.log_every == 0 or step == start:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            dt = (time.time() - t0) / max(step + 1 - start, 1)
+            log_fn(f"[loop] step={step + 1} loss={m.get('loss', 0):.4f} "
+                   f"({dt * 1e3:.0f} ms/step)")
+            history.append({"step": step + 1, **m})
+        if mgr and (step + 1) % loop.ckpt_every == 0:
+            mgr.save(step + 1, state)
+    if mgr:
+        mgr.save(loop.steps, state, block=True)
+    return state, history

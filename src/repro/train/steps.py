@@ -1,0 +1,134 @@
+"""Train / serve step functions (jit-able, mesh-aware).
+
+``make_train_step`` builds the canonical SPMD step: forward (remat-scanned),
+CE loss (optionally sequence-chunked so per-chip logits stay at one chunk —
+critical at 200k+ vocab), backward, (optional EF-compressed) optimizer update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer, OptState
+
+IGNORE = -100
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: OptState
+
+
+def cross_entropy(logits, labels):
+    """Sum of CE over valid labels + valid count.  labels==IGNORE skipped."""
+    valid = labels != IGNORE
+    safe = jnp.where(valid, labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.where(valid, lse - gold, 0.0)
+    return jnp.sum(ce), jnp.sum(valid)
+
+
+def lm_loss(model: Model, params, batch):
+    """(mean CE, metrics).  Chunked over the sequence when cfg.loss_chunk>0."""
+    chunk = model.cfg.loss_chunk
+    hidden, aux = model.forward_hidden(params, batch)
+    labels = batch["labels"]
+    s = hidden.shape[1]
+    if labels.shape[1] != s:  # vlm: labels cover full (patch+text) length
+        labels = labels[:, -s:]
+    # global next-token shift (boundary-safe under chunking)
+    shifted = jnp.concatenate(
+        [labels[:, 1:], jnp.full((labels.shape[0], 1), IGNORE, labels.dtype)],
+        axis=1)
+    if chunk and s % chunk == 0 and s > chunk:
+        nch = s // chunk
+        h = hidden.reshape(hidden.shape[0], nch, chunk, -1).transpose(1, 0, 2, 3)
+        l = shifted.reshape(shifted.shape[0], nch, chunk).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            hc, lc = xs
+            logits = model.logits_head(params, hc)
+            ce, n = cross_entropy(logits, lc)
+            return (carry[0] + ce, carry[1] + n), None
+
+        body = jax.checkpoint(body)
+        (ce, n), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                  (h, l))
+    else:
+        logits = model.logits_head(params, hidden)
+        ce, n = cross_entropy(logits, shifted)
+    loss = ce / jnp.maximum(n, 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux, "tokens": n}
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    loss_fn: Callable | None = None):
+    loss_fn = loss_fn or (lambda p, b: lm_loss(model, p, b))
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch), has_aux=True)(state.params)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, grad_norm=gnorm)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, loss_fn: Callable | None = None):
+    loss_fn = loss_fn or (lambda p, b: lm_loss(model, p, b))
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+def make_serve_steps(model: Model):
+    """(prefill_step, decode_step) for batched serving."""
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    def decode_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return prefill_step, decode_step
+
+
+# --------------------------------------------------------------------------
+# classification (paper's GLUE-analog experiments)
+# --------------------------------------------------------------------------
+
+
+def make_cls_loss(cfg):
+    from repro.models import transformer
+
+    def loss_fn(params, batch):
+        logits, aux = transformer.forward_cls(params, batch, cfg)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return ce + 0.01 * aux, {"loss": ce, "acc": acc, "aux": aux}
+
+    return loss_fn

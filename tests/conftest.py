@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run subprocess sets its own 512)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,58 @@
+"""Unit tests for the trip-count-aware HLO text analyzer (synthetic HLO)."""
+
+from repro.launch.hlo_analysis import HloModule, _type_bytes, analyze
+
+SYNTHETIC = """
+HloModule jit_f
+
+%body (p: (s32[], f32[16,256])) -> (s32[], f32[16,256]) {
+  %p = (s32[], f32[16,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[16,256] get-tuple-element(%p), index=1
+  %w = f32[256,256]{1,0} constant({...})
+  %dot.1 = f32[16,256]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[16,256]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add_promoted
+  ROOT %t = (s32[], f32[16,256]) tuple(%i, %ar)
+}
+
+%cond (p.1: (s32[], f32[16,256])) -> pred[] {
+  %p.1 = (s32[], f32[16,256]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[16,256]) -> f32[16,256] {
+  %a = f32[16,256]{1,0} parameter(0)
+  %init = (s32[], f32[16,256]) tuple(%a, %a)
+  %while.1 = (s32[], f32[16,256]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = f32[16,1024]{1,0} all-gather(%a), dimensions={1}
+  ROOT %out = f32[16,256]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[16,256]{1,0}") == 16 * 256 * 4
+    assert _type_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert _type_bytes("pred[]") == 1
+
+
+def test_trip_count_multiplier_and_flops():
+    res = analyze(SYNTHETIC)
+    # dot: 2 * 16 * 256 * 256 flops, x12 trips
+    assert res["hlo_dot_flops_per_device"] == 2 * 16 * 256 * 256 * 12
+
+
+def test_collectives_trip_corrected_and_promotion_halved():
+    res = analyze(SYNTHETIC)
+    coll = res["hlo_collective_bytes_per_device"]
+    # promoted f32 AR counted at bf16 size, x12 trips
+    assert coll["all-reduce"] == (16 * 256 * 4 // 2) * 12
+    # entry-level AG counted once
+    assert coll["all-gather"] == 16 * 1024 * 4
+
+
+def test_comment_stripping():
+    text = SYNTHETIC.replace("(s32[], f32[16,256])",
+                             "(s32[], /*index=1*/f32[16,256])")
+    res = analyze(text)
+    assert res["hlo_dot_flops_per_device"] == 2 * 16 * 256 * 256 * 12

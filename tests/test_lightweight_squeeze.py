@@ -1,0 +1,115 @@
+"""Tests for lightweight fine-tuning (paper §4.1) and dimension squeezing
+(Algorithm 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core import lightweight, mpo, squeeze
+
+
+def _mpo_tree(key=0):
+    cfg = L.MPOConfig(bond_ffn=12, bond_attn=12, bond_embed=12, n=3)
+    lin1 = L.init_linear(jax.random.PRNGKey(key), 48, 96, cfg=cfg)
+    lin2 = L.init_linear(jax.random.PRNGKey(key + 1), 96, 48, cfg=cfg)
+    tree = {"l1": lin1, "l2": lin2,
+            "norm": {"scale": L.Annot(jnp.ones(48), ("embed",))}}
+    params, _ = L.split_annotations(tree)
+    return params, cfg
+
+
+def test_lfa_mask_freezes_central_only():
+    params, _ = _mpo_tree()
+    mask = lightweight.trainable_mask(params, mode="lfa")
+    assert mask["l1"]["cores"]["central"] is False
+    assert mask["l1"]["cores"]["c0"] is True
+    assert mask["norm"]["scale"] is True
+    inv = lightweight.trainable_mask(params, mode="central_only")
+    assert inv["l1"]["cores"]["central"] is True
+    assert inv["l1"]["cores"]["c0"] is False
+
+
+def test_lfa_reduces_trainable_params():
+    params, _ = _mpo_tree()
+    mask = lightweight.trainable_mask(params, mode="lfa")
+    tr, tot = lightweight.count_trainable(params, mask)
+    assert tr < tot
+    assert lightweight.reduction_savings(params, mask) > 0
+
+
+def test_mask_full_mode():
+    params, _ = _mpo_tree()
+    mask = lightweight.trainable_mask(params, mode="full")
+    assert all(jax.tree.leaves(mask))
+
+
+def test_apply_mask_to_grads():
+    params, _ = _mpo_tree()
+    mask = lightweight.trainable_mask(params, mode="lfa")
+    grads = jax.tree.map(jnp.ones_like, params)
+    masked = lightweight.apply_mask_to_grads(grads, mask)
+    assert float(jnp.sum(masked["l1"]["cores"]["central"])) == 0.0
+    assert float(jnp.sum(masked["l1"]["cores"]["c0"])) > 0
+
+
+# --------------------------------------------------------------- Algorithm 2
+
+
+def test_find_mpo_layers():
+    params, _ = _mpo_tree()
+    found = squeeze.find_mpo_layers(params)
+    assert set(found) == {("l1", "cores"), ("l2", "cores")}
+
+
+def test_squeeze_once_reduces_params():
+    params, _ = _mpo_tree()
+    before = squeeze.model_compression_ratio(params)
+    new, info = squeeze.squeeze_once(params)
+    assert info is not None
+    after = squeeze.model_compression_ratio(new)
+    assert after < before
+
+
+def test_squeeze_picks_least_error_bond():
+    """The chosen bond's predicted eps must be the global minimum (Alg. 2)."""
+    params, _ = _mpo_tree()
+    layers = squeeze.find_mpo_layers(params)
+    path, k, new_bonds, eps = squeeze.least_error_candidate(layers)
+    # recompute all candidate epsilons manually
+    all_eps = []
+    for p, cd in layers.items():
+        cores = squeeze.cores_to_list(cd)
+        for kk, s in enumerate(mpo.bond_spectra(cores)):
+            cur = min(cores[kk].shape[-1], s.shape[0])
+            if cur - 1 >= 1:
+                all_eps.append(float(mpo.local_truncation_error(s, cur - 1)))
+    assert eps == pytest.approx(min(all_eps), rel=1e-5)
+
+
+def test_run_dimension_squeezing_stops_on_gap():
+    params, _ = _mpo_tree()
+
+    calls = {"n": 0}
+
+    def finetune(p):
+        return p
+
+    def evaluate(p):
+        calls["n"] += 1
+        # metric collapses after 3 squeezes -> must stop early
+        return 1.0 if calls["n"] < 4 else 0.0
+
+    out, hist = squeeze.run_dimension_squeezing(
+        params, finetune, evaluate, delta=0.5, max_iters=10)
+    assert 0 < len(hist) <= 4
+
+
+def test_squeezed_model_still_applies():
+    params, cfg = _mpo_tree()
+    new, _ = squeeze.squeeze_once(params)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 48))
+    y = L.apply_linear(new["l1"], x, cfg=cfg)
+    assert y.shape == (4, 96)
+    assert bool(jnp.all(jnp.isfinite(y)))
