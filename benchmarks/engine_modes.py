@@ -1,0 +1,96 @@
+"""Engine execution-mode benchmark: decode throughput with/without cached W.
+
+Measures the serving loop (prefill once, then N single-token decode steps)
+twice over the same weights:
+
+  * ``cached``   — ``init_serve`` contracts every decode-``cached`` matrix to
+                   dense W once at serving init; the decode loop performs
+                   zero per-step core contractions;
+  * ``uncached`` — raw factorized params; every decode step re-executes the
+                   per-call plan (at decode token counts: the factorized
+                   chain — the pre-engine behavior).
+
+Emits CSV rows for the harness and writes ``BENCH_engine.json`` next to the
+repo root, seeding the decode-throughput perf trajectory.
+
+Run:  PYTHONPATH=src python -m benchmarks.engine_modes
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ARCH = "qwen3-14b"
+BATCH = 8
+PROMPT = 32
+DECODE_TOKENS = 32
+REPS = 3
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_engine.json")
+
+
+def _decode_loop(decode_step, params, tok, cache, n_tokens: int) -> float:
+    """Seconds for ``n_tokens`` jitted decode steps (best of REPS)."""
+    best = float("inf")
+    for _ in range(REPS):
+        t, c = tok, cache
+        t0 = time.perf_counter()
+        for _ in range(n_tokens):
+            t, _, c = decode_step(params, t, c)
+        jax.block_until_ready(t)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    from repro import configs
+    from repro.configs.base import ShapeConfig
+    from repro.models import model as M
+    from repro.train.steps import make_serve_steps
+
+    cfg = configs.smoke_config(ARCH)
+    model = M.build(cfg)
+    params, _ = model.init_params(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in M.make_batch(
+        cfg, ShapeConfig("bench", "prefill", PROMPT, BATCH)).items()}
+    max_len = PROMPT + DECODE_TOKENS + 1
+
+    rows, result = [], {"arch": ARCH, "batch": BATCH, "prompt": PROMPT,
+                        "decode_tokens": DECODE_TOKENS}
+    for label, use_cache in (("cached", True), ("uncached", False)):
+        prefill_step, decode_step, init_serve = make_serve_steps(
+            model, weight_cache=use_cache)
+        prefill_step = jax.jit(prefill_step)
+        decode_step = jax.jit(decode_step)
+        t0 = time.perf_counter()
+        sparams, cache = jax.block_until_ready(
+            init_serve(params, BATCH, max_len))
+        t_init = time.perf_counter() - t0
+        logits, cache = jax.block_until_ready(
+            prefill_step(sparams, batch, cache))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        # warm the decode jit outside the timed region
+        _ = jax.block_until_ready(decode_step(sparams, tok, cache))
+        dt = _decode_loop(decode_step, sparams, tok, cache, DECODE_TOKENS)
+        tok_s = BATCH * DECODE_TOKENS / dt
+        result[f"decode_tok_s_{label}"] = round(tok_s, 1)
+        result[f"init_ms_{label}"] = round(t_init * 1e3, 2)
+        rows.append(f"engine,{label},decode_tok_s={tok_s:.1f},"
+                    f"init_ms={t_init * 1e3:.2f}")
+    result["decode_speedup"] = round(
+        result["decode_tok_s_cached"] / result["decode_tok_s_uncached"], 3)
+    rows.append(f"engine,speedup,{result['decode_speedup']:.3f}x")
+    with open(_JSON_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

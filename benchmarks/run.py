@@ -11,9 +11,10 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig2_lowrank, roofline, table1_variation,
-                            table2_complexity, table3_glue_analog,
-                            table4_variants, table5_last_layers)
+    from benchmarks import (engine_modes, fig2_lowrank, roofline,
+                            table1_variation, table2_complexity,
+                            table3_glue_analog, table4_variants,
+                            table5_last_layers)
     suites = {
         "table1": table1_variation.run,
         "table2": table2_complexity.run,
@@ -22,6 +23,7 @@ def main() -> None:
         "table5": table5_last_layers.run,
         "fig2": fig2_lowrank.run,
         "roofline": roofline.run,
+        "engine": engine_modes.run,
     }
     want = sys.argv[1:] or list(suites)
     for name in want:

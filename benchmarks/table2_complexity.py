@@ -7,11 +7,14 @@ relative ordering is what transfers)."""
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import mpo
-from repro.core.layers import flops_factorized_per_token
+from repro.core import layers as L
+from repro.core.engine import engine_for, flops_factorized_per_token
 from benchmarks.common import time_call
 
 I, J, BOND, B = 1024, 1024, 16, 64
@@ -24,10 +27,14 @@ def run() -> list[str]:
     dense = jax.jit(lambda x: x @ w)
     us = time_call(dense, x)
     rows.append(f"table2,dense,{us:.1f},flops_per_tok={2 * I * J}")
+    # the factorized chain, executed through the engine (mode forced so the
+    # table isolates the paper's Table 2 contraction cost)
+    eng = engine_for(dataclasses.replace(L.MPOConfig(), mode="factorized"))
     for n in (2, 3, 5, 7):
         spec = mpo.MPOSpec.make(I, J, n=n, bond_dim=BOND)
         cores, _ = mpo.decompose(w, spec)
-        fn = jax.jit(lambda x, cs=tuple(cores): mpo.apply_mpo(list(cs), x))
+        params = {"cores": L.cores_from_list(cores)}
+        fn = jax.jit(lambda x, p=params: eng.linear(p, x, phase="prefill"))
         us = time_call(fn, x)
         fl = flops_factorized_per_token([c.shape for c in cores])
         label = "mpo_n2(svd)" if n == 2 else f"mpo_n{n}"

@@ -1,0 +1,340 @@
+"""Unified MPO execution engine: phase-aware planning + serving weight cache.
+
+DESIGN
+------
+An MPO-factorized matrix can be *executed* several ways, and the right way
+depends on where in the model lifecycle the matmul happens:
+
+  mode          what runs                                  when it wins
+  ------------  -----------------------------------------  ----------------------
+  factorized    sequential chain contraction               memory-bound / heavily
+                (``mpo.apply_mpo``, Table 2 O(n m d^3))    truncated bonds
+  reconstruct   contract cores -> dense W, MXU matmul      compute-bound shapes,
+                (``mpo.matmul_reconstruct``; custom VJP    training (factorized
+                keeps the backward in core-space)          VJP shards badly)
+  kernel        fused on-chip rebuild + matmul Pallas      forward-only phases on
+                kernel — W never round-trips HBM           real TPUs (interpret
+                (``kernels.ops.mpo_linear``)               mode is never fast)
+  cached        dense W contracted ONCE at serving init    decode: the rebuild is
+                and reused for every decode step           amortized to zero
+
+Historically this choice was re-derived ad-hoc inside every ``apply_linear``
+call: the kernel path was unreachable from ``mode="auto"``, and the decode
+loop re-contracted every layer's cores into W on every generated token.  The
+engine centralizes the decision:
+
+* ``ExecutionPlan`` — one immutable plan per (core shapes, token count,
+  phase, interpret).  Plans are memoized process-wide (``_plan`` lru_cache):
+  planning is pure Python on static shapes and happens once per distinct
+  call signature, not per call.
+* **Phases** — ``train`` (fwd+bwd; kernel excluded: no VJP, and
+  ``matmul_reconstruct``'s core-space backward is the tuned path),
+  ``prefill`` (forward-only, many tokens: kernel becomes a real auto
+  candidate on MXU-aligned shapes when not interpreting), ``decode``
+  (forward-only, one token per step: ``cached`` vs ``factorized`` by
+  per-token FLOPs — the one-time rebuild is amortized across the whole
+  generation, so only the steady-state cost matters).
+* **Serving weight cache** — ``MPOEngine.cache_weights(params)`` walks a
+  params tree once at serving init (alongside KV-cache allocation) and
+  replaces every factorized matrix whose decode plan is ``cached`` with its
+  contracted dense ``{"w": W}``.  Matrices whose factorized per-token cost
+  beats the dense matmul (e.g. heavily compressed embedding tables, where
+  densifying would also resurrect the full [vocab, d] memory footprint)
+  stay factorized.  The decode loop then performs ZERO per-step core
+  contractions: the dense path short-circuits before any planning.
+* **Cache invalidation** — plans are keyed by core *shapes*, so
+  ``tt_round`` / dimension squeezing (which shrink bonds) automatically get
+  fresh plans.  A densified ``cache_weights`` tree, however, is a snapshot:
+  any mutation of the underlying cores (squeeze, further fine-tuning)
+  invalidates it and ``cache_weights`` must be re-run from the new cores.
+* ``freeze_central_grads`` and master-weight -> activation-dtype casting are
+  handled here, in exactly one place, for forward, transpose (tied logits)
+  and embedding lookup alike.
+
+Callers (``core.layers`` wrappers, models, serving steps, benchmarks) never
+touch ``mpo.apply_mpo`` / ``mpo.matmul_reconstruct`` / ``kernels.ops``
+directly — the engine is the single entry point for executing a factorized
+matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mpo
+
+PHASES = ("train", "prefill", "decode")
+MODES = ("factorized", "reconstruct", "kernel", "cached")
+
+# default tile height for the Pallas kernel path (multiple of the f32
+# sublane count 8; the kernel itself validates alignment)
+DEFAULT_BLOCK_M = 256
+
+
+# --------------------------------------------------------------------------
+# cost model (moved here from core.layers — DESIGN §3.1 napkin math, now
+# computed once per plan instead of per call)
+# --------------------------------------------------------------------------
+
+
+def flops_factorized_per_token(shapes: Sequence[tuple]) -> int:
+    """FLOPs/token of the sequential contraction in ``mpo.apply_mpo``."""
+    ins = [s[1] for s in shapes]
+    total, rest = 0, math.prod(ins)
+    out_done = 1
+    for (d0, ik, jk, d1) in shapes:
+        rest //= ik
+        total += 2 * out_done * d0 * ik * rest * jk * d1
+        out_done *= jk
+    return total
+
+
+def flops_reconstruct(shapes: Sequence[tuple]) -> int:
+    """One-time FLOPs to contract the cores into W."""
+    total = 0
+    acc_rows = shapes[0][1] * shapes[0][2]
+    for (d0, ik, jk, d1) in shapes[1:]:
+        total += 2 * acc_rows * d0 * ik * jk * d1
+        acc_rows *= ik * jk
+    return total
+
+
+def flops_dense_per_token(shapes: Sequence[tuple]) -> int:
+    """FLOPs/token of the dense ``x @ W`` matmul once W exists."""
+    ins = math.prod(s[1] for s in shapes)
+    outs = math.prod(s[2] for s in shapes)
+    return 2 * ins * outs
+
+
+def _kernel_eligible(shapes: Sequence[tuple], block_m: int) -> bool:
+    """Can the fused Pallas kernel run these shapes efficiently?
+
+    The kernel rebuilds one (I/i1, J/j1) W-tile per program; those tile dims
+    must respect the TPU f32 tiling floor (8 sublanes x 128 lanes) or Mosaic
+    pads every tile and the on-chip rebuild loses to plain reconstruct.
+    """
+    ins = [s[1] for s in shapes]
+    outs = [s[2] for s in shapes]
+    i_tile = math.prod(ins[1:])
+    j_tile = math.prod(outs[1:])
+    return (block_m % 8 == 0 and i_tile % 8 == 0 and j_tile % 128 == 0)
+
+
+# --------------------------------------------------------------------------
+# planning
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Immutable decision record for one (matrix, workload) pairing."""
+
+    mode: str                      # factorized | reconstruct | kernel | cached
+    phase: str                     # train | prefill | decode
+    shapes: tuple                  # core shapes ((d0, i, j, d1), ...)
+    tokens: int                    # tokens per call this plan was sized for
+    flops_factorized: int          # per-token chain cost
+    flops_dense: int               # per-token dense matmul cost
+    flops_rebuild: int             # one-time cores -> W cost
+    block_m: int = DEFAULT_BLOCK_M
+    interpret: bool = True         # kernel interpreter flag (False on TPU)
+    reason: str = ""               # human-readable why (for tests/debug)
+
+
+def choose_mode(cfg, shapes: Sequence[tuple], tokens: int, phase: str,
+                *, interpret: bool = True) -> tuple[str, str]:
+    """(mode, reason) for one matrix execution.  ``cfg`` is an
+    ``layers.MPOConfig``; a non-"auto" ``cfg.mode`` always wins."""
+    if phase not in PHASES:
+        raise ValueError(f"unknown phase {phase!r} (expected one of {PHASES})")
+    if cfg.mode != "auto":
+        return cfg.mode, f"forced by cfg.mode={cfg.mode!r}"
+    shapes = tuple(tuple(s) for s in shapes)
+    fact_tok = flops_factorized_per_token(shapes)
+    dense_tok = flops_dense_per_token(shapes)
+    rebuild = flops_reconstruct(shapes)
+    if phase == "decode":
+        # the one-time rebuild happens at serving init (cache_weights) and is
+        # amortized over the whole generation -> steady-state FLOPs decide
+        if dense_tok < fact_tok:
+            return "cached", (f"dense {dense_tok} < factorized {fact_tok} "
+                              "FLOPs/token; rebuild amortized at cache init")
+        return "factorized", (f"factorized {fact_tok} <= dense {dense_tok} "
+                              "FLOPs/token; caching W would also cost I*J HBM")
+    cost_fact = tokens * fact_tok
+    cost_recon = rebuild + tokens * dense_tok
+    if cost_fact < cost_recon:
+        return "factorized", (f"chain {cost_fact} < rebuild+dense "
+                              f"{cost_recon} FLOPs at {tokens} tokens")
+    if phase == "prefill" and not interpret \
+            and _kernel_eligible(shapes, DEFAULT_BLOCK_M):
+        return "kernel", ("dense-favored forward-only phase on TPU with "
+                          "MXU-aligned tiles: fuse rebuild on-chip")
+    return "reconstruct", (f"rebuild+dense {cost_recon} <= chain {cost_fact} "
+                           f"FLOPs at {tokens} tokens")
+
+
+@functools.lru_cache(maxsize=None)
+def _plan(cfg, shapes: tuple, tokens: int, phase: str,
+          interpret: bool) -> ExecutionPlan:
+    mode, reason = choose_mode(cfg, shapes, tokens, phase,
+                               interpret=interpret)
+    return ExecutionPlan(
+        mode=mode, phase=phase, shapes=shapes, tokens=tokens,
+        flops_factorized=flops_factorized_per_token(shapes),
+        flops_dense=flops_dense_per_token(shapes),
+        flops_rebuild=flops_reconstruct(shapes),
+        block_m=DEFAULT_BLOCK_M, interpret=interpret, reason=reason)
+
+
+# --------------------------------------------------------------------------
+# engine
+# --------------------------------------------------------------------------
+
+
+def _reconstruct_stacked(cores: Sequence[jax.Array]) -> jax.Array:
+    """``mpo.reconstruct`` vmapped over any leading stacked dims (scanned
+    layers, MoE experts) — cores are 4-D per matrix plus k batch dims."""
+    fn = lambda *cs: mpo.reconstruct(list(cs))
+    for _ in range(cores[0].ndim - 4):
+        fn = jax.vmap(fn)
+    return fn(*cores)
+
+
+class MPOEngine:
+    """Execution engine for every MPO-factorized matrix under one
+    ``MPOConfig``.  Owns plan lookup, mode dispatch, the serving-time weight
+    cache, and the single authoritative implementation of
+    ``freeze_central_grads`` + master-weight dtype casting.
+
+    Stateless apart from the config: plans are memoized process-wide, so
+    engines are cheap and ``engine_for(cfg)`` returns a shared instance.
+    """
+
+    def __init__(self, cfg, *, interpret: bool | None = None):
+        self.cfg = cfg
+        # None -> follow the kernels.ops container default at call time
+        self._interpret = interpret
+
+    @property
+    def interpret(self) -> bool:
+        if self._interpret is not None:
+            return self._interpret
+        from repro.kernels import ops  # lazy: avoid import cycle
+        return ops.INTERPRET
+
+    # ---- planning ----
+
+    def plan(self, shapes: Sequence[tuple], tokens: int,
+             phase: str) -> ExecutionPlan:
+        """The (memoized) plan for one matrix at one workload point."""
+        return _plan(self.cfg, tuple(tuple(s) for s in shapes), int(tokens),
+                     phase, self.interpret)
+
+    # ---- core preparation: the ONE place freeze + casting happen ----
+
+    def _prepare_cores(self, params: dict, dtype) -> list[jax.Array]:
+        from repro.core import layers  # lazy: layers imports engine lazily too
+        cores = layers.cores_to_list(params["cores"])
+        if dtype is not None:
+            cores = [c.astype(dtype) for c in cores]
+        if self.cfg.freeze_central_grads:
+            mid = len(cores) // 2
+            cores[mid] = jax.lax.stop_gradient(cores[mid])
+        return cores
+
+    # ---- execution entry points ----
+
+    def linear(self, params: dict, x: jax.Array, *, transpose: bool = False,
+               phase: str = "train") -> jax.Array:
+        """``y = x @ W`` (or ``x @ W^T``) through the planned mode.
+
+        Master weights stay f32; compute is cast to the activation dtype
+        (bf16 on the MXU) at the point of use.  A dense ``{"w": ...}`` entry
+        — either a never-factorized matrix or a serving-time cached W —
+        short-circuits before planning: zero per-step contractions.
+        """
+        if "w" in params:
+            w = params["w"].astype(x.dtype)
+            return x @ (w.T if transpose else w)
+        cores = self._prepare_cores(params, x.dtype)
+        if transpose:
+            cores = mpo.transpose_cores(cores)
+        tokens = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+        shapes = [c.shape for c in cores]
+        plan = self.plan(shapes, tokens, phase)
+        if plan.mode == "cached" and self.cfg.mode == "auto":
+            # "cached" assumes the rebuild was amortized at cache init, but
+            # the caller passed raw (un-densified) cores — the rebuild would
+            # run on EVERY call.  Re-decide as a forward-only one-shot
+            # execution (the prefill rule prices the per-call rebuild in).
+            plan = self.plan(shapes, tokens, "prefill")
+        if plan.mode == "kernel":
+            from repro.kernels import ops  # lazy: avoid import cycle
+            return ops.mpo_linear(cores, x, block_m=plan.block_m,
+                                  interpret=plan.interpret)
+        if plan.mode == "factorized":
+            return mpo.apply_mpo(cores, x)
+        # "reconstruct" (or a forced non-auto "cached" over raw cores:
+        # contract now, same math)
+        return mpo.matmul_reconstruct(x, tuple(cores))
+
+    def logits(self, params: dict, h: jax.Array, *,
+               phase: str = "train") -> jax.Array:
+        """Tied-embedding output head: ``h @ E^T``."""
+        return self.linear(params, h, transpose=True, phase=phase)
+
+    def embedding(self, params: dict, ids: jax.Array, *, dtype=None,
+                  phase: str = "train") -> jax.Array:
+        """Row lookup ``W[ids, :]`` — dense take or factorized one-hot chain.
+
+        ``phase`` is accepted for interface uniformity: the lookup itself has
+        a single factorized realization (it is a gather, not a matmul), so no
+        plan is consulted; a cached dense table short-circuits to ``take``.
+        """
+        if "w" in params:
+            w = params["w"] if dtype is None else params["w"].astype(dtype)
+            return jnp.take(w, ids, axis=0)
+        cores = self._prepare_cores(params, dtype)
+        return mpo.embed_lookup(cores, ids)
+
+    # ---- serving-time weight cache ----
+
+    def cache_weights(self, params, *, dtype=None):
+        """One-time densification at serving init (next to the KV cache).
+
+        Returns a new params tree where every factorized matrix whose decode
+        plan is ``cached`` is replaced by its contracted dense ``{"w": W}``;
+        everything else (factorized-favored matrices, norms, biases, already-
+        dense weights) passes through untouched.  Handles scan-stacked layer
+        and MoE-expert leading dims.  The result is a SNAPSHOT: re-run after
+        any core mutation (``tt_round``, dimension squeezing, training).
+        """
+        def visit(node):
+            if isinstance(node, dict):
+                if "cores" in node:
+                    from repro.core import layers  # lazy
+                    cores = layers.cores_to_list(node["cores"])
+                    shapes = tuple(c.shape[-4:] for c in cores)
+                    plan = self.plan(shapes, 1, "decode")
+                    if plan.mode != "cached":
+                        return node
+                    w = _reconstruct_stacked(cores)
+                    if dtype is not None:
+                        w = w.astype(dtype)
+                    return {"w": w}
+                return {k: visit(v) for k, v in node.items()}
+            return node
+        return visit(params)
+
+
+@functools.lru_cache(maxsize=None)
+def engine_for(cfg) -> MPOEngine:
+    """Shared engine instance per (hashable, frozen) ``MPOConfig``."""
+    return MPOEngine(cfg)

@@ -67,7 +67,9 @@ class MPOConfig:
     bond_embed: int | None = 64
     bond_attn: int | None = 128
     bond_ffn: int | None = 128
-    # execution mode: auto | factorized | reconstruct | kernel
+    # execution mode: auto | factorized | reconstruct | kernel | cached
+    # ("auto" plans per phase in repro.core.engine; "cached" expects a
+    # serving params tree densified by MPOEngine.cache_weights)
     mode: str = "auto"
     # divisibility required of central factors on model-sharded dims
     shard_multiple: int = 1
@@ -179,67 +181,19 @@ def init_linear(key, in_dim: int, out_dim: int, *, cfg: MPOConfig,
                       zip(core_names(spec.n), cores, ax)}}
 
 
-# ---- execution-mode selection (napkin math, see DESIGN §3.1) ----
-
-
-def flops_factorized_per_token(shapes: Sequence[tuple]) -> int:
-    """FLOPs/token of the sequential contraction in ``apply_mpo``."""
-    ins = [s[1] for s in shapes]
-    outs = [s[2] for s in shapes]
-    total, rest = 0, math.prod(ins)
-    out_done = 1
-    for (d0, ik, jk, d1) in shapes:
-        rest //= ik
-        total += 2 * out_done * d0 * ik * rest * jk * d1
-        out_done *= jk
-    return total
-
-
-def flops_reconstruct(shapes: Sequence[tuple]) -> int:
-    """One-time FLOPs to contract the cores into W."""
-    total = 0
-    acc_rows = shapes[0][1] * shapes[0][2]
-    for (d0, ik, jk, d1) in shapes[1:]:
-        total += 2 * acc_rows * d0 * ik * jk * d1
-        acc_rows *= ik * jk
-    return total
-
-
-def choose_mode(cfg: MPOConfig, shapes: Sequence[tuple], tokens: int) -> str:
-    if cfg.mode != "auto":
-        return cfg.mode
-    ins = math.prod(s[1] for s in shapes)
-    outs = math.prod(s[2] for s in shapes)
-    cost_fact = tokens * flops_factorized_per_token(shapes)
-    cost_recon = flops_reconstruct(shapes) + tokens * 2 * ins * outs
-    return "factorized" if cost_fact < cost_recon else "reconstruct"
+# ---- execution: thin wrappers over the unified engine ----
+#
+# Mode selection, FLOPs accounting, ``freeze_central_grads`` and dtype
+# casting all live in ``repro.core.engine`` (one ``ExecutionPlan`` per
+# (core shapes, tokens, phase)); these wrappers exist so layer/model code
+# keeps the compact ``apply_*(params, x, cfg=...)`` call shape.
 
 
 def apply_linear(params: dict, x: jax.Array, *, cfg: MPOConfig,
-                 transpose: bool = False) -> jax.Array:
-    """y = x @ W (or x @ W^T), choosing the cheaper execution path.
-
-    Master weights stay f32; compute is cast to the activation dtype
-    (bf16 on the MXU) at the point of use.
-    """
-    if "w" in params:
-        w = params["w"].astype(x.dtype)
-        return x @ (w.T if transpose else w)
-    cores = [c.astype(x.dtype) for c in cores_to_list(params["cores"])]
-    if cfg.freeze_central_grads:
-        mid = len(cores) // 2
-        cores[mid] = jax.lax.stop_gradient(cores[mid])
-    if transpose:
-        cores = mpo.transpose_cores(cores)
-    shapes = [c.shape for c in cores]
-    tokens = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
-    mode = choose_mode(cfg, shapes, tokens)
-    if mode == "kernel":
-        from repro.kernels import ops  # lazy: avoid import cycle
-        return ops.mpo_linear(cores, x)
-    if mode == "factorized":
-        return mpo.apply_mpo(cores, x)
-    return mpo.matmul_reconstruct(x, tuple(cores))
+                 transpose: bool = False, phase: str = "train") -> jax.Array:
+    """y = x @ W (or x @ W^T) through the engine's planned execution mode."""
+    from repro.core.engine import engine_for  # lazy: avoid import cycle
+    return engine_for(cfg).linear(params, x, transpose=transpose, phase=phase)
 
 
 def init_embedding(key, vocab: int, dim: int, *, cfg: MPOConfig,
@@ -257,22 +211,16 @@ def init_embedding(key, vocab: int, dim: int, *, cfg: MPOConfig,
 
 
 def apply_embedding(params: dict, ids: jax.Array, *, cfg: MPOConfig,
-                    dtype=None) -> jax.Array:
-    if "w" in params:
-        w = params["w"] if dtype is None else params["w"].astype(dtype)
-        return jnp.take(w, ids, axis=0)
-    cores = cores_to_list(params["cores"])
-    if dtype is not None:
-        cores = [c.astype(dtype) for c in cores]
-    if cfg.freeze_central_grads:
-        mid = len(cores) // 2
-        cores[mid] = jax.lax.stop_gradient(cores[mid])
-    return mpo.embed_lookup(cores, ids)
+                    dtype=None, phase: str = "train") -> jax.Array:
+    from repro.core.engine import engine_for  # lazy: avoid import cycle
+    return engine_for(cfg).embedding(params, ids, dtype=dtype, phase=phase)
 
 
-def apply_logits(params: dict, h: jax.Array, *, cfg: MPOConfig) -> jax.Array:
+def apply_logits(params: dict, h: jax.Array, *, cfg: MPOConfig,
+                 phase: str = "train") -> jax.Array:
     """Tied-embedding output head: h @ E^T."""
-    return apply_linear(params, h, cfg=cfg, transpose=True)
+    from repro.core.engine import engine_for  # lazy: avoid import cycle
+    return engine_for(cfg).logits(params, h, phase=phase)
 
 
 def linear_num_params(params: dict) -> int:

@@ -47,7 +47,7 @@ def _tile_reconstruct(core_refs, n: int):
     return t.transpose(perm).reshape(i1, j1)
 
 
-def _kernel(*refs, n: int, n_i1: int):
+def _kernel(*refs, n: int):
     core_refs = refs[:n]
     x_ref, o_ref = refs[n], refs[n + 1]
     w_tile = _tile_reconstruct(core_refs, n)               # (I1, J1) f32
@@ -66,12 +66,21 @@ def _kernel(*refs, n: int, n_i1: int):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
-               block_m: int = 256, interpret: bool = True) -> jax.Array:
+               block_m: int = 256, interpret: bool) -> jax.Array:
     """``y[..., J] = x[..., I] @ W(cores)`` without materializing W in HBM.
 
-    ``interpret=True`` runs the kernel body in Python on CPU (this container
-    has no TPU); on TPU pass ``interpret=False``.
+    ``interpret`` is REQUIRED: the caller (normally the execution engine via
+    ``kernels.ops``) decides whether the kernel body runs compiled on TPU
+    (``False``) or interpreted in Python on CPU (``True``, correctness-only).
+
+    ``block_m`` must be a positive multiple of 8 (the f32 sublane count —
+    unaligned tile heights make Mosaic pad every x/out tile).  Token counts
+    smaller than ``block_m`` shrink the tile to the next multiple of 8
+    instead of silently adopting an unaligned size.
     """
+    if block_m <= 0 or block_m % 8:
+        raise ValueError(f"block_m must be a positive multiple of 8, "
+                         f"got {block_m}")
     cores = list(cores)
     n = len(cores)
     ins = [c.shape[1] for c in cores]
@@ -82,7 +91,7 @@ def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
     m = math.prod(lead) if lead else 1
     xm = x.reshape(m, i_dim)
 
-    bm = min(block_m, m)
+    bm = min(block_m, 8 * ((m + 7) // 8))  # aligned, never exceeds block_m
     pad_m = (-m) % bm
     if pad_m:
         xm = jnp.pad(xm, ((0, pad_m), (0, 0)))
@@ -99,7 +108,7 @@ def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
     in_specs.append(pl.BlockSpec((bm, i1_blk), lambda mi, jj, ii: (mi, ii)))
     out_spec = pl.BlockSpec((bm, j1_blk), lambda mi, jj, ii: (mi, jj))
 
-    kernel = functools.partial(_kernel, n=n, n_i1=i1)
+    kernel = functools.partial(_kernel, n=n)
     y = pl.pallas_call(
         kernel,
         grid=(mt, j1, i1),

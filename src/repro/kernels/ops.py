@@ -10,13 +10,16 @@ from repro.kernels.mpo_linear import mpo_linear as _mpo_linear
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 # interpret=True executes kernel bodies in Python on CPU (this container);
-# flip to False on real TPU.
+# flip to False on real TPU.  The execution engine reads this as its default
+# and passes ``interpret`` explicitly on every kernel call.
 INTERPRET = True
 
 
 def mpo_linear(cores: Sequence[jax.Array], x: jax.Array,
-               block_m: int = 256) -> jax.Array:
-    return _mpo_linear(tuple(cores), x, block_m=block_m, interpret=INTERPRET)
+               block_m: int = 256,
+               interpret: bool | None = None) -> jax.Array:
+    interpret = INTERPRET if interpret is None else interpret
+    return _mpo_linear(tuple(cores), x, block_m=block_m, interpret=interpret)
 
 
 def ssd_scan(x, dt, a_log, b, c, d_skip, chunk: int = 64):

@@ -98,7 +98,10 @@ class HloModule:
                         break
                 if depth >= 1:
                     buf += ch
-            operands = [a.strip().lstrip("%") for a in _split_top(buf)]
+            # newer XLA prints operands with inline types
+            # ("f32[16,256]{1,0} %h.1"); the name is the last token
+            operands = [a.strip().split()[-1].lstrip("%")
+                        for a in _split_top(buf) if a.strip()]
             self.comps[cur].append({
                 "name": name, "type": type_str, "op": op,
                 "operands": operands, "subs": subs, "trip": trip,

@@ -152,13 +152,13 @@ def _split_proj(cfg: ModelConfig, zxbcdt):
 
 
 def apply_mamba_block(params, x, cfg: ModelConfig, *, state=None,
-                      decode: bool = False):
+                      decode: bool = False, phase: str = "train"):
     """Returns (y, new_state).  decode=True -> single-token recurrence."""
     bsz = x.shape[0]
     di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     res = x
     hmid = nn.apply_rmsnorm(params["norm"], x)
-    zxbcdt = L.apply_linear(params["in_proj"], hmid, cfg=cfg.mpo)
+    zxbcdt = L.apply_linear(params["in_proj"], hmid, cfg=cfg.mpo, phase=phase)
     z, xs, b, c, dt = _split_proj(cfg, zxbcdt)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     xs = xs.reshape(xs.shape[:-1] + (h, p))
@@ -172,7 +172,7 @@ def apply_mamba_block(params, x, cfg: ModelConfig, *, state=None,
         y = y[:, None]
     y = y.reshape(bsz, -1, di)
     y = nn.apply_rmsnorm(params["out_norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
-    out = L.apply_linear(params["out_proj"], y, cfg=cfg.mpo)
+    out = L.apply_linear(params["out_proj"], y, cfg=cfg.mpo, phase=phase)
     return res + out.astype(res.dtype), new_state
 
 
@@ -197,12 +197,13 @@ def init(key, cfg: ModelConfig):
     }
 
 
-def forward_hidden(params, batch, cfg: ModelConfig):
-    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+def forward_hidden(params, batch, cfg: ModelConfig, *, phase="train"):
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo,
+                          dtype=cfg.jnp_dtype, phase=phase)
     x = x.astype(cfg.jnp_dtype)
 
     def body(x, layer):
-        y, _ = apply_mamba_block(layer, x, cfg)
+        y, _ = apply_mamba_block(layer, x, cfg, phase=phase)
         return y, None
 
     if cfg.remat:
@@ -212,40 +213,45 @@ def forward_hidden(params, batch, cfg: ModelConfig):
     return nn.apply_rmsnorm(params["final_norm"], x), jnp.float32(0)
 
 
-def logits_head(params, hidden, cfg: ModelConfig):
-    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo)
+def logits_head(params, hidden, cfg: ModelConfig, *, phase="train"):
+    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo, phase=phase)
 
 
-def forward(params, batch, cfg: ModelConfig):
-    hidden, aux = forward_hidden(params, batch, cfg)
-    return logits_head(params, hidden, cfg), aux
+def forward(params, batch, cfg: ModelConfig, *, phase="train"):
+    hidden, aux = forward_hidden(params, batch, cfg, phase=phase)
+    return logits_head(params, hidden, cfg, phase=phase), aux
 
 
-def prefill(params, batch, state, cfg: ModelConfig):
+def prefill(params, batch, state, cfg: ModelConfig, *, phase="prefill"):
     """SSM prefill: run the chunked scan, keep each layer's final state."""
-    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo,
+                          dtype=cfg.jnp_dtype, phase=phase)
     x = x.astype(cfg.jnp_dtype)
 
     def body(x, layer):
-        y, final_state = apply_mamba_block(layer, x, cfg)
+        y, final_state = apply_mamba_block(layer, x, cfg, phase=phase)
         return y, final_state
 
     x, states = jax.lax.scan(body, x, params["layers"])
     x = nn.apply_rmsnorm(params["final_norm"], x)
-    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo)
+    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo,
+                            phase=phase)
     return logits, states
 
 
-def decode_step(params, tokens, state, cfg: ModelConfig):
+def decode_step(params, tokens, state, cfg: ModelConfig, *, phase="decode"):
     """tokens: (B,1); state: (L,B,H,N,P)."""
-    x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo,
+                          dtype=cfg.jnp_dtype, phase=phase)
     x = x.astype(cfg.jnp_dtype)
 
     def body(x, scanned):
         layer, st = scanned
-        y, new_st = apply_mamba_block(layer, x, cfg, state=st, decode=True)
+        y, new_st = apply_mamba_block(layer, x, cfg, state=st, decode=True,
+                                      phase=phase)
         return y, new_st
 
     x, new_states = jax.lax.scan(body, x, (params["layers"], state))
     x = nn.apply_rmsnorm(params["final_norm"], x)
-    return L.apply_logits(params["embed"], x, cfg=cfg.mpo), new_states
+    return L.apply_logits(params["embed"], x, cfg=cfg.mpo,
+                          phase=phase), new_states

@@ -22,16 +22,22 @@ from repro.models import mamba, transformer, whisper, zamba
 class Model:
     cfg: ModelConfig
     init: Callable           # key -> Annot tree
-    forward: Callable        # (params, batch) -> (logits, aux)
-    forward_hidden: Callable  # (params, batch) -> (hidden, aux)
-    logits_head: Callable    # (params, hidden) -> logits
+    forward: Callable        # (params, batch[, phase]) -> (logits, aux)
+    forward_hidden: Callable  # (params, batch[, phase]) -> (hidden, aux)
+    logits_head: Callable    # (params, hidden[, phase]) -> logits
     init_cache: Callable     # (batch, max_len) -> cache pytree
-    prefill: Callable        # (params, batch, cache) -> (logits, cache)
-    decode_step: Callable    # (params, tokens, cache) -> (logits, cache)
+    prefill: Callable        # (params, batch, cache[, phase]) -> (logits, cache)
+    decode_step: Callable    # (params, tokens, cache[, phase]) -> (logits, cache)
 
     def init_params(self, key):
         """(params, axes) — values split from logical-axis annotations."""
         return L.split_annotations(self.init(key))
+
+    def cache_weights(self, params):
+        """Serving-time weight cache: contract decode-``cached`` matrices to
+        dense W once (done at serving init, next to the KV cache)."""
+        from repro.core.engine import engine_for
+        return engine_for(self.cfg.mpo).cache_weights(params)
 
 
 def build(cfg: ModelConfig) -> Model:
@@ -45,12 +51,17 @@ def build(cfg: ModelConfig) -> Model:
     return Model(
         cfg=cfg,
         init=lambda key: mod.init(key, cfg),
-        forward=lambda p, b: mod.forward(p, b, cfg),
-        forward_hidden=lambda p, b: mod.forward_hidden(p, b, cfg),
-        logits_head=lambda p, h: mod.logits_head(p, h, cfg),
+        forward=lambda p, b, phase="train": mod.forward(p, b, cfg,
+                                                        phase=phase),
+        forward_hidden=lambda p, b, phase="train": mod.forward_hidden(
+            p, b, cfg, phase=phase),
+        logits_head=lambda p, h, phase="train": mod.logits_head(
+            p, h, cfg, phase=phase),
         init_cache=init_cache,
-        prefill=lambda p, b, c: mod.prefill(p, b, c, cfg),
-        decode_step=lambda p, t, c: mod.decode_step(p, t, c, cfg),
+        prefill=lambda p, b, c, phase="prefill": mod.prefill(
+            p, b, c, cfg, phase=phase),
+        decode_step=lambda p, t, c, phase="decode": mod.decode_step(
+            p, t, c, cfg, phase=phase),
     )
 
 

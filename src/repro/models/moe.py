@@ -39,7 +39,7 @@ def init_moe(key, d_model: int, d_ff: int, num_experts: int, act: str,
 
 
 def apply_moe(params, x, *, act: str, mpo: MPOConfig, top_k: int,
-              capacity_factor: float = 1.25):
+              capacity_factor: float = 1.25, phase: str = "train"):
     """x: (B, S, D) -> (B, S, D) with auxiliary load-balance loss."""
     from repro.parallel.ctx import shard_batch_dim
     b, s, d = x.shape
@@ -75,7 +75,7 @@ def apply_moe(params, x, *, act: str, mpo: MPOConfig, top_k: int,
     xe = xe.reshape(e, b * cap, d)
 
     def expert_fwd(p, h):
-        return nn.apply_mlp(p, h, act, mpo)
+        return nn.apply_mlp(p, h, act, mpo, phase=phase)
 
     ye = jax.vmap(expert_fwd)(params["experts"], xe)   # (E, B*C, D)
     ye = ye.reshape(e, b, cap, d)

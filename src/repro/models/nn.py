@@ -147,19 +147,24 @@ def causal_mask(sq: int, sk: int, *, window: int | None = None,
 
 
 def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
-                    positions, mask, kv_x=None, cache=None):
+                    positions, mask, kv_x=None, cache=None,
+                    phase: str = "train"):
     """Returns (y, new_cache).
 
     ``cache``: dict(k, v, pos) for incremental decode; ``kv_x`` for
     cross-attention (ignores cache k/v writes when provided with cache —
-    cross k/v are precomputed in the cache by prefill).
+    cross k/v are precomputed in the cache by prefill).  ``phase`` feeds the
+    execution engine's per-matrix planning (train / prefill / decode).
     """
     b = x.shape[0]
     h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = _split_heads(L.apply_linear(params["wq"], x, cfg=mpo), h, dh)
+    q = _split_heads(L.apply_linear(params["wq"], x, cfg=mpo, phase=phase),
+                     h, dh)
     src = x if kv_x is None else kv_x
-    k = _split_heads(L.apply_linear(params["wk"], src, cfg=mpo), kvh, dh)
-    v = _split_heads(L.apply_linear(params["wv"], src, cfg=mpo), kvh, dh)
+    k = _split_heads(L.apply_linear(params["wk"], src, cfg=mpo, phase=phase),
+                     kvh, dh)
+    v = _split_heads(L.apply_linear(params["wv"], src, cfg=mpo, phase=phase),
+                     kvh, dh)
     if cfg.qk_norm:
         q = apply_rmsnorm(params["q_norm"], q)
         k = apply_rmsnorm(params["k_norm"], k)
@@ -196,7 +201,7 @@ def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
     w = attention_scores(q, k, cfg, mask)     # (B,KV,G,Sq,Sk)
     y = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
     y = y.reshape(b, y.shape[1], h * dh)
-    return L.apply_linear(params["wo"], y, cfg=mpo), new_cache
+    return L.apply_linear(params["wo"], y, cfg=mpo, phase=phase), new_cache
 
 
 def init_kv_cache(batch: int, max_len: int, cfg: AttnCfg, dtype=jnp.bfloat16):
@@ -223,13 +228,13 @@ def init_mlp(key, d_model: int, d_ff: int, act: str, mpo: MPOConfig):
     return p
 
 
-def apply_mlp(params, x, act: str, mpo: MPOConfig):
-    up = L.apply_linear(params["w_up"], x, cfg=mpo)
+def apply_mlp(params, x, act: str, mpo: MPOConfig, phase: str = "train"):
+    up = L.apply_linear(params["w_up"], x, cfg=mpo, phase=phase)
     if act == "silu":
-        g = L.apply_linear(params["w_gate"], x, cfg=mpo)
+        g = L.apply_linear(params["w_gate"], x, cfg=mpo, phase=phase)
         h = jax.nn.silu(g) * up
     elif act == "gelu":
-        g = L.apply_linear(params["w_gate"], x, cfg=mpo)
+        g = L.apply_linear(params["w_gate"], x, cfg=mpo, phase=phase)
         h = jax.nn.gelu(g) * up
     elif act == "relu2":
         h = jnp.square(jax.nn.relu(up))
@@ -237,7 +242,7 @@ def apply_mlp(params, x, act: str, mpo: MPOConfig):
         h = jax.nn.gelu(up)
     else:
         raise ValueError(act)
-    return L.apply_linear(params["w_down"], h, cfg=mpo)
+    return L.apply_linear(params["w_down"], h, cfg=mpo, phase=phase)
 
 
 # --------------------------------------------------------------------------

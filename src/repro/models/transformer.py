@@ -84,27 +84,29 @@ def _is_local_flags(cfg: ModelConfig) -> jax.Array:
 
 
 def _layer_fwd(cfg: ModelConfig, x, layer, *, positions, mask, mask_local,
-               cache=None):
+               cache=None, phase="train"):
     acfg = attn_cfg(cfg)
     is_local = layer.pop("_is_local") if "_is_local" in layer else None
     m = mask if is_local is None else jnp.where(is_local, mask_local, mask)
     from repro.parallel import ctx
     h = nn.apply_rmsnorm(layer["ln1"], x)
     a, new_cache = nn.apply_attention(layer["attn"], h, acfg, cfg.mpo,
-                                      positions=positions, mask=m, cache=cache)
+                                      positions=positions, mask=m, cache=cache,
+                                      phase=phase)
     x = ctx.shard_activation(x + a)
     h = nn.apply_rmsnorm(layer["ln2"], x)
     if cfg.num_experts:
         f, aux = apply_moe(layer["moe"], h, act=cfg.mlp_act, mpo=cfg.mpo,
                            top_k=cfg.top_k,
-                           capacity_factor=cfg.capacity_factor)
+                           capacity_factor=cfg.capacity_factor, phase=phase)
     else:
-        f, aux = nn.apply_mlp(layer["mlp"], h, cfg.mlp_act, cfg.mpo), 0.0
+        f, aux = nn.apply_mlp(layer["mlp"], h, cfg.mlp_act, cfg.mpo,
+                              phase=phase), 0.0
     return ctx.shard_activation(x + f), new_cache, aux
 
 
 def _run_stack(cfg: ModelConfig, params, x, *, positions, mask, mask_local,
-               caches=None):
+               caches=None, phase="train"):
     """Scan the layer stack; returns (x, new_caches, aux_loss_sum)."""
     flags = _is_local_flags(cfg)
 
@@ -116,7 +118,7 @@ def _run_stack(cfg: ModelConfig, params, x, *, positions, mask, mask_local,
             layer["_is_local"] = flag
         y, new_cache, aux = _layer_fwd(cfg, x, layer, positions=positions,
                                        mask=mask, mask_local=mask_local,
-                                       cache=cache)
+                                       cache=cache, phase=phase)
         return (y, aux_sum + aux), new_cache
 
     if cfg.remat:
@@ -134,20 +136,22 @@ def _run_stack(cfg: ModelConfig, params, x, *, positions, mask, mask_local,
     return x, new_caches, aux
 
 
-def _logits(cfg: ModelConfig, params, x):
+def _logits(cfg: ModelConfig, params, x, phase="train"):
     if cfg.tie_embeddings:
-        logits = L.apply_logits(params["embed"], x, cfg=cfg.mpo)
+        logits = L.apply_logits(params["embed"], x, cfg=cfg.mpo, phase=phase)
     else:
-        logits = L.apply_linear(params["lm_head"], x, cfg=cfg.mpo)
+        logits = L.apply_linear(params["lm_head"], x, cfg=cfg.mpo,
+                                phase=phase)
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = c * jnp.tanh(logits / c)
     return logits
 
 
-def _embed_inputs(cfg: ModelConfig, params, batch):
+def _embed_inputs(cfg: ModelConfig, params, batch, phase="train"):
     """Token (+ optional patch) embeddings -> (B, S, D)."""
-    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo,
+                          dtype=cfg.jnp_dtype, phase=phase)
     x = x * (cfg.d_model ** 0.5) if cfg.name.startswith("gemma") else x
     if cfg.family == "vlm" and "patches" in batch:
         p = batch["patches"] @ params["projector"]["w"]
@@ -156,9 +160,9 @@ def _embed_inputs(cfg: ModelConfig, params, batch):
     return ctx.shard_activation(x.astype(cfg.jnp_dtype))
 
 
-def forward_hidden(params, batch, cfg: ModelConfig):
+def forward_hidden(params, batch, cfg: ModelConfig, *, phase="train"):
     """Teacher-forced forward up to the final norm -> (hidden, aux_loss)."""
-    x = _embed_inputs(cfg, params, batch)
+    x = _embed_inputs(cfg, params, batch, phase)
     s = x.shape[1]
     positions = jnp.arange(s)[None, :]
     if cfg.causal:
@@ -167,18 +171,18 @@ def forward_hidden(params, batch, cfg: ModelConfig):
         mask = jnp.ones((1, 1, s, s), bool)
     mask_local = nn.causal_mask(s, s, window=cfg.local_window)
     x, _, aux = _run_stack(cfg, params, x, positions=positions, mask=mask,
-                           mask_local=mask_local, caches=None)
+                           mask_local=mask_local, caches=None, phase=phase)
     return nn.apply_rmsnorm(params["final_norm"], x), aux
 
 
-def logits_head(params, hidden, cfg: ModelConfig):
-    return _logits(cfg, params, hidden)
+def logits_head(params, hidden, cfg: ModelConfig, *, phase="train"):
+    return _logits(cfg, params, hidden, phase)
 
 
-def forward(params, batch, cfg: ModelConfig):
+def forward(params, batch, cfg: ModelConfig, *, phase="train"):
     """Teacher-forced forward -> (logits, aux_loss)."""
-    hidden, aux = forward_hidden(params, batch, cfg)
-    return _logits(cfg, params, hidden), aux
+    hidden, aux = forward_hidden(params, batch, cfg, phase=phase)
+    return _logits(cfg, params, hidden, phase), aux
 
 
 def forward_cls(params, batch, cfg: ModelConfig):
@@ -208,9 +212,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
             "pos": jnp.zeros((cfg.num_layers,), jnp.int32)}
 
 
-def prefill(params, batch, cache, cfg: ModelConfig):
+def prefill(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
     """Fill KV caches with the prompt; returns (last_logits, cache)."""
-    x = _embed_inputs(cfg, params, batch)
+    x = _embed_inputs(cfg, params, batch, phase)
     s = x.shape[1]
     max_len = cache["k"].shape[2]
     positions = jnp.arange(s)[None, :]
@@ -218,14 +222,14 @@ def prefill(params, batch, cache, cfg: ModelConfig):
     mask_local = nn.causal_mask(s, max_len, window=cfg.local_window)
     x, new_caches, _ = _run_stack(cfg, params, x, positions=positions,
                                   mask=mask, mask_local=mask_local,
-                                  caches=cache)
+                                  caches=cache, phase=phase)
     x = nn.apply_rmsnorm(params["final_norm"], x)
-    return _logits(cfg, params, x[:, -1:]), new_caches
+    return _logits(cfg, params, x[:, -1:], phase), new_caches
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
+def decode_step(params, tokens, cache, cfg: ModelConfig, *, phase="decode"):
     """One-token decode against a filled cache.  tokens: (B, 1)."""
-    x = _embed_inputs(cfg, params, {"tokens": tokens})
+    x = _embed_inputs(cfg, params, {"tokens": tokens}, phase)
     max_len = cache["k"].shape[2]
     pos = cache["pos"][0]
     positions = pos + jnp.zeros((1, 1), jnp.int32)
@@ -237,6 +241,6 @@ def decode_step(params, tokens, cache, cfg: ModelConfig):
         mask_local = mask
     x, new_caches, _ = _run_stack(cfg, params, x, positions=positions,
                                   mask=mask, mask_local=mask_local,
-                                  caches=cache)
+                                  caches=cache, phase=phase)
     x = nn.apply_rmsnorm(params["final_norm"], x)
-    return _logits(cfg, params, x), new_caches
+    return _logits(cfg, params, x, phase), new_caches

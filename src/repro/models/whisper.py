@@ -61,7 +61,7 @@ def init(key, cfg: ModelConfig):
     }
 
 
-def encode(params, frames, cfg: ModelConfig):
+def encode(params, frames, cfg: ModelConfig, *, phase="train"):
     """frames: (B, F, D) stub embeddings -> encoder output."""
     x = frames.astype(cfg.jnp_dtype) + params["enc_pos"][None].astype(cfg.jnp_dtype)
     sf = x.shape[1]
@@ -71,10 +71,12 @@ def encode(params, frames, cfg: ModelConfig):
     def body(x, layer):
         h = nn.apply_layernorm(layer["ln1"], x)
         a, _ = nn.apply_attention(layer["attn"], h, _acfg(cfg, False),
-                                  cfg.mpo, positions=positions, mask=mask)
+                                  cfg.mpo, positions=positions, mask=mask,
+                                  phase=phase)
         x = x + a
         h = nn.apply_layernorm(layer["ln2"], x)
-        return x + nn.apply_mlp(layer["mlp"], h, "gelu_plain", cfg.mpo), None
+        return x + nn.apply_mlp(layer["mlp"], h, "gelu_plain", cfg.mpo,
+                                phase=phase), None
 
     if cfg.remat:
         body = jax.checkpoint(body)
@@ -82,7 +84,8 @@ def encode(params, frames, cfg: ModelConfig):
     return nn.apply_layernorm(params["enc_norm"], x)
 
 
-def _dec_stack(cfg, params, x, enc_out, *, positions, mask, caches=None):
+def _dec_stack(cfg, params, x, enc_out, *, positions, mask, caches=None,
+               phase="train"):
     sf = enc_out.shape[1]
     xmask = jnp.ones((1, 1, x.shape[1], sf), bool)
 
@@ -93,15 +96,17 @@ def _dec_stack(cfg, params, x, enc_out, *, positions, mask, caches=None):
         self_cache = None if cache is None else cache["self"]
         a, new_self = nn.apply_attention(layer["attn"], h, _acfg(cfg, True),
                                          cfg.mpo, positions=positions,
-                                         mask=mask, cache=self_cache)
+                                         mask=mask, cache=self_cache,
+                                         phase=phase)
         x = x + a
         h = nn.apply_layernorm(layer["ln_x"], x)
         a, _ = nn.apply_attention(layer["xattn"], h, _acfg(cfg, False),
                                   cfg.mpo, positions=positions, mask=xmask,
-                                  kv_x=enc_out)
+                                  kv_x=enc_out, phase=phase)
         x = x + a
         h = nn.apply_layernorm(layer["ln2"], x)
-        x = x + nn.apply_mlp(layer["mlp"], h, "gelu_plain", cfg.mpo)
+        x = x + nn.apply_mlp(layer["mlp"], h, "gelu_plain", cfg.mpo,
+                             phase=phase)
         new_cache = None if cache is None else {"self": new_self}
         return x, new_cache
 
@@ -111,27 +116,28 @@ def _dec_stack(cfg, params, x, enc_out, *, positions, mask, caches=None):
     return x, new_caches
 
 
-def forward_hidden(params, batch, cfg: ModelConfig):
+def forward_hidden(params, batch, cfg: ModelConfig, *, phase="train"):
     """batch: {frames: (B,F,D), tokens: (B,S)} -> (hidden, 0)."""
-    enc_out = encode(params, batch["frames"], cfg)
+    enc_out = encode(params, batch["frames"], cfg, phase=phase)
     tok = batch["tokens"]
     s = tok.shape[1]
     x = L.apply_embedding(params["embed"], tok, cfg=cfg.mpo,
-                            dtype=cfg.jnp_dtype)
+                            dtype=cfg.jnp_dtype, phase=phase)
     x = x + params["dec_pos"][:s][None].astype(cfg.jnp_dtype)
     positions = jnp.arange(s)[None, :]
     mask = nn.causal_mask(s, s)
-    x, _ = _dec_stack(cfg, params, x, enc_out, positions=positions, mask=mask)
+    x, _ = _dec_stack(cfg, params, x, enc_out, positions=positions, mask=mask,
+                      phase=phase)
     return nn.apply_layernorm(params["final_norm"], x), jnp.float32(0)
 
 
-def logits_head(params, hidden, cfg: ModelConfig):
-    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo)
+def logits_head(params, hidden, cfg: ModelConfig, *, phase="train"):
+    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo, phase=phase)
 
 
-def forward(params, batch, cfg: ModelConfig):
-    hidden, aux = forward_hidden(params, batch, cfg)
-    return logits_head(params, hidden, cfg), aux
+def forward(params, batch, cfg: ModelConfig, *, phase="train"):
+    hidden, aux = forward_hidden(params, batch, cfg, phase=phase)
+    return logits_head(params, hidden, cfg, phase=phase), aux
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
@@ -144,35 +150,38 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
                                  dtype)}
 
 
-def prefill(params, batch, cache, cfg: ModelConfig):
-    enc_out = encode(params, batch["frames"], cfg)
+def prefill(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
+    enc_out = encode(params, batch["frames"], cfg, phase=phase)
     tok = batch["tokens"]
     s = tok.shape[1]
     max_len = cache["self"]["k"].shape[2]
     x = L.apply_embedding(params["embed"], tok, cfg=cfg.mpo,
-                            dtype=cfg.jnp_dtype)
+                            dtype=cfg.jnp_dtype, phase=phase)
     x = x + params["dec_pos"][:s][None].astype(cfg.jnp_dtype)
     positions = jnp.arange(s)[None, :]
     mask = nn.causal_mask(s, max_len)
     x, new_self = _dec_stack(cfg, params, x, enc_out, positions=positions,
-                             mask=mask, caches={"self": cache["self"]})
+                             mask=mask, caches={"self": cache["self"]},
+                             phase=phase)
     x = nn.apply_layernorm(params["final_norm"], x)
-    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo)
+    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo,
+                            phase=phase)
     return logits, {"self": new_self["self"], "enc_out": enc_out.astype(cache["enc_out"].dtype)}
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
+def decode_step(params, tokens, cache, cfg: ModelConfig, *, phase="decode"):
     enc_out = cache["enc_out"].astype(cfg.jnp_dtype)
     max_len = cache["self"]["k"].shape[2]
     pos = cache["self"]["pos"][0]
     x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo,
-                            dtype=cfg.jnp_dtype)
+                            dtype=cfg.jnp_dtype, phase=phase)
     pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)
     x = x + pos_emb[None].astype(cfg.jnp_dtype)
     positions = pos + jnp.zeros((1, 1), jnp.int32)
     mask = (jnp.arange(max_len)[None, :] <= pos)[None, None]
     x, new_self = _dec_stack(cfg, params, x, enc_out, positions=positions,
-                             mask=mask, caches={"self": cache["self"]})
+                             mask=mask, caches={"self": cache["self"]},
+                             phase=phase)
     x = nn.apply_layernorm(params["final_norm"], x)
-    return L.apply_logits(params["embed"], x, cfg=cfg.mpo), \
+    return L.apply_logits(params["embed"], x, cfg=cfg.mpo, phase=phase), \
         {"self": new_self["self"], "enc_out": cache["enc_out"]}

@@ -48,22 +48,24 @@ def init(key, cfg: ModelConfig):
     }
 
 
-def _shared_attn_fwd(cfg, shared, idx, x, *, positions, mask, cache=None):
+def _shared_attn_fwd(cfg, shared, idx, x, *, positions, mask, cache=None,
+                     phase="train"):
     """Apply shared transformer block ``idx % num_shared`` (gathered slice):
     attention + MLP (the config's d_ff), parameter-shared across segments."""
     block = jax.tree.map(lambda a: a[idx % cfg.num_shared_attn], shared)
     h = nn.apply_rmsnorm(block["ln"], x)
     a, new_cache = nn.apply_attention(block["attn"], h, transformer.attn_cfg(cfg),
                                       cfg.mpo, positions=positions, mask=mask,
-                                      cache=cache)
+                                      cache=cache, phase=phase)
     x = x + a
     h = nn.apply_rmsnorm(block["ln2"], x)
-    x = x + nn.apply_mlp(block["mlp"], h, "gelu_plain", cfg.mpo)
+    x = x + nn.apply_mlp(block["mlp"], h, "gelu_plain", cfg.mpo, phase=phase)
     return x, new_cache
 
 
 def _stack(cfg: ModelConfig, params, x, *, positions, mask,
-           ssm_states=None, kv_caches=None, decode: bool = False):
+           ssm_states=None, kv_caches=None, decode: bool = False,
+           phase: str = "train"):
     """Segmented run: [shared-attn, scan(attn_every mamba blocks)] x S."""
     nseg = _num_segments(cfg)
     per = cfg.attn_every
@@ -73,10 +75,11 @@ def _stack(cfg: ModelConfig, params, x, *, positions, mask,
     def mamba_seg(x, scanned):
         if decode:
             layer, st = scanned
-            y, new_st = apply_mamba_block(layer, x, cfg, state=st, decode=True)
+            y, new_st = apply_mamba_block(layer, x, cfg, state=st, decode=True,
+                                          phase=phase)
             return y, new_st
         layer = scanned
-        y, fstate = apply_mamba_block(layer, x, cfg)
+        y, fstate = apply_mamba_block(layer, x, cfg, phase=phase)
         return y, fstate
 
     body = mamba_seg
@@ -91,7 +94,7 @@ def _stack(cfg: ModelConfig, params, x, *, positions, mask,
             kv_c = jax.tree.map(lambda a: a[s], kv_caches)
         x, kv_out = _shared_attn_fwd(cfg, params["shared_attn"], s, x,
                                      positions=positions, mask=mask,
-                                     cache=kv_c)
+                                     cache=kv_c, phase=phase)
         if kv_caches is not None:
             for key in ("k", "v", "pos"):
                 new_kv[key].append(kv_out[key])
@@ -117,23 +120,25 @@ def _stack(cfg: ModelConfig, params, x, *, positions, mask,
     return x, out_states, out_kv
 
 
-def forward_hidden(params, batch, cfg: ModelConfig):
-    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+def forward_hidden(params, batch, cfg: ModelConfig, *, phase="train"):
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo,
+                          dtype=cfg.jnp_dtype, phase=phase)
     x = x.astype(cfg.jnp_dtype)
     s = x.shape[1]
     positions = jnp.arange(s)[None, :]
     mask = nn.causal_mask(s, s)
-    x, _, _ = _stack(cfg, params, x, positions=positions, mask=mask)
+    x, _, _ = _stack(cfg, params, x, positions=positions, mask=mask,
+                     phase=phase)
     return nn.apply_rmsnorm(params["final_norm"], x), jnp.float32(0)
 
 
-def logits_head(params, hidden, cfg: ModelConfig):
-    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo)
+def logits_head(params, hidden, cfg: ModelConfig, *, phase="train"):
+    return L.apply_logits(params["embed"], hidden, cfg=cfg.mpo, phase=phase)
 
 
-def forward(params, batch, cfg: ModelConfig):
-    hidden, aux = forward_hidden(params, batch, cfg)
-    return logits_head(params, hidden, cfg), aux
+def forward(params, batch, cfg: ModelConfig, *, phase="train"):
+    hidden, aux = forward_hidden(params, batch, cfg, phase=phase)
+    return logits_head(params, hidden, cfg, phase=phase), aux
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
@@ -147,22 +152,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     }
 
 
-def prefill(params, batch, cache, cfg: ModelConfig):
-    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+def prefill(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
+    x = L.apply_embedding(params["embed"], batch["tokens"], cfg=cfg.mpo,
+                          dtype=cfg.jnp_dtype, phase=phase)
     x = x.astype(cfg.jnp_dtype)
     s = x.shape[1]
     max_len = cache["kv"]["k"].shape[2]
     positions = jnp.arange(s)[None, :]
     mask = nn.causal_mask(s, max_len)
     x, states, kv = _stack(cfg, params, x, positions=positions, mask=mask,
-                           kv_caches=cache["kv"])
+                           kv_caches=cache["kv"], phase=phase)
     x = nn.apply_rmsnorm(params["final_norm"], x)
-    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo)
+    logits = L.apply_logits(params["embed"], x[:, -1:], cfg=cfg.mpo,
+                            phase=phase)
     return logits, {"kv": kv, "ssm": states}
 
 
-def decode_step(params, tokens, cache, cfg: ModelConfig):
-    x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo, dtype=cfg.jnp_dtype)
+def decode_step(params, tokens, cache, cfg: ModelConfig, *, phase="decode"):
+    x = L.apply_embedding(params["embed"], tokens, cfg=cfg.mpo,
+                          dtype=cfg.jnp_dtype, phase=phase)
     x = x.astype(cfg.jnp_dtype)
     max_len = cache["kv"]["k"].shape[2]
     pos = cache["kv"]["pos"][0]
@@ -170,7 +178,7 @@ def decode_step(params, tokens, cache, cfg: ModelConfig):
     mask = (jnp.arange(max_len)[None, :] <= pos)[None, None]
     x, states, kv = _stack(cfg, params, x, positions=positions, mask=mask,
                            ssm_states=cache["ssm"], kv_caches=cache["kv"],
-                           decode=True)
+                           decode=True, phase=phase)
     x = nn.apply_rmsnorm(params["final_norm"], x)
-    return L.apply_logits(params["embed"], x, cfg=cfg.mpo), \
+    return L.apply_logits(params["embed"], x, cfg=cfg.mpo, phase=phase), \
         {"kv": kv, "ssm": states}

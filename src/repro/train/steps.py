@@ -38,7 +38,7 @@ def cross_entropy(logits, labels):
 def lm_loss(model: Model, params, batch):
     """(mean CE, metrics).  Chunked over the sequence when cfg.loss_chunk>0."""
     chunk = model.cfg.loss_chunk
-    hidden, aux = model.forward_hidden(params, batch)
+    hidden, aux = model.forward_hidden(params, batch, phase="train")
     labels = batch["labels"]
     s = hidden.shape[1]
     if labels.shape[1] != s:  # vlm: labels cover full (patch+text) length
@@ -54,7 +54,7 @@ def lm_loss(model: Model, params, batch):
 
         def body(carry, xs):
             hc, lc = xs
-            logits = model.logits_head(params, hc)
+            logits = model.logits_head(params, hc, phase="train")
             ce, n = cross_entropy(logits, lc)
             return (carry[0] + ce, carry[1] + n), None
 
@@ -62,7 +62,7 @@ def lm_loss(model: Model, params, batch):
         (ce, n), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
                                   (h, l))
     else:
-        logits = model.logits_head(params, hidden)
+        logits = model.logits_head(params, hidden, phase="train")
         ce, n = cross_entropy(logits, shifted)
     loss = ce / jnp.maximum(n, 1.0)
     total = loss + 0.01 * aux
@@ -101,18 +101,34 @@ def make_eval_step(model: Model, loss_fn: Callable | None = None):
 # --------------------------------------------------------------------------
 
 
-def make_serve_steps(model: Model):
-    """(prefill_step, decode_step) for batched serving."""
+def make_serve_steps(model: Model, *, weight_cache: bool = True):
+    """(prefill_step, decode_step, init_serve) for batched serving.
+
+    ``init_serve(params, batch, max_len)`` runs ONCE per serving session: it
+    allocates the KV cache and — when ``weight_cache`` — contracts every
+    factorized matrix whose decode plan is ``cached`` into its dense W
+    (``MPOEngine.cache_weights``), returning ``(serve_params, cache)``.  The
+    decode loop then performs zero per-step core contractions; pass the
+    returned ``serve_params`` (not the raw training params) to the steps.
+    The weight cache is a snapshot — re-run ``init_serve`` after any core
+    mutation (training, ``tt_round``, dimension squeezing).
+    """
+
+    def init_serve(params, batch: int, max_len: int):
+        cache = model.init_cache(batch, max_len)
+        serve_params = model.cache_weights(params) if weight_cache else params
+        return serve_params, cache
 
     def prefill_step(params, batch, cache):
-        return model.prefill(params, batch, cache)
+        return model.prefill(params, batch, cache, phase="prefill")
 
     def decode_step(params, tokens, cache):
-        logits, cache = model.decode_step(params, tokens, cache)
+        logits, cache = model.decode_step(params, tokens, cache,
+                                          phase="decode")
         next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         return next_tok, logits, cache
 
-    return prefill_step, decode_step
+    return prefill_step, decode_step, init_serve
 
 
 # --------------------------------------------------------------------------

@@ -25,7 +25,7 @@ def test_mpo_linear_kernel(dims, n, bond, dtype):
     cores = [c.astype(dtype) for c in
              mpo.init_cores(jax.random.PRNGKey(0), spec)]
     x = jax.random.normal(jax.random.PRNGKey(1), (37, i)).astype(dtype)
-    y = mpo_linear(tuple(cores), x, block_m=16)
+    y = mpo_linear(tuple(cores), x, block_m=16, interpret=True)
     y_ref = mpo_linear_ref(cores, x)
     tol = 2e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(y, np.float32),
@@ -38,17 +38,26 @@ def test_mpo_linear_block_sweep(block_m):
     spec = mpo.MPOSpec.make(48, 60, n=3, bond_dim=6)
     cores = mpo.init_cores(jax.random.PRNGKey(2), spec)
     x = jax.random.normal(jax.random.PRNGKey(3), (19, 48))
-    y = mpo_linear(tuple(cores), x, block_m=block_m)
+    y = mpo_linear(tuple(cores), x, block_m=block_m, interpret=True)
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(mpo_linear_ref(cores, x)),
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("block_m", [0, -8, 7, 12])
+def test_mpo_linear_rejects_unaligned_block_m(block_m):
+    spec = mpo.MPOSpec.make(48, 60, n=3, bond_dim=6)
+    cores = mpo.init_cores(jax.random.PRNGKey(2), spec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (19, 48))
+    with pytest.raises(ValueError, match="multiple of 8"):
+        mpo_linear(tuple(cores), x, block_m=block_m, interpret=True)
 
 
 def test_mpo_linear_batched_lead_dims():
     spec = mpo.MPOSpec.make(32, 48, n=3, bond_dim=4)
     cores = mpo.init_cores(jax.random.PRNGKey(4), spec)
     x = jax.random.normal(jax.random.PRNGKey(5), (3, 5, 32))
-    y = mpo_linear(tuple(cores), x, block_m=8)
+    y = mpo_linear(tuple(cores), x, block_m=8, interpret=True)
     assert y.shape == (3, 5, 48)
     np.testing.assert_allclose(
         np.asarray(y.reshape(15, 48)),
