@@ -1,20 +1,18 @@
-"""Shared helpers for the paper-table benchmarks (CPU-scale analogs)."""
+"""Shared helpers for the paper-table benchmarks (CPU-scale analogs).
+
+``finetune_cls`` drives the GLUE-analog fine-tune through the public
+``Session`` lifecycle API; ``cls_session`` hands the session itself to
+benchmarks that keep going (squeeze, serve)."""
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs, optim
-from repro.configs.base import ShapeConfig
-from repro.core import lightweight
-from repro.data.pipeline import SyntheticCLS
-from repro.models import model as M
-from repro.models import transformer
-from repro.train.steps import TrainState, make_cls_loss, make_train_step
+from repro import Session, configs
 
 
 def time_call(fn, *args, reps: int = 20, warmup: int = 3) -> float:
@@ -29,48 +27,45 @@ def time_call(fn, *args, reps: int = 20, warmup: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
-def finetune_cls(arch: str, *, mode: str = "lfa", mpo: bool = True,
-                 steps: int = 80, seq_len: int = 32, batch: int = 16,
-                 lr: float = 2e-3, seed: int = 0, params=None,
-                 trainable_mask=None, cfg=None):
+def cls_config(arch: str, *, mpo: bool = True):
+    cfg = configs.smoke_config(arch, num_classes=2)
+    if not mpo:
+        cfg = dataclasses.replace(
+            cfg, mpo=dataclasses.replace(cfg.mpo, enabled=False))
+    return cfg
+
+
+def cls_session(arch: str, *, mode: str = "lfa", mpo: bool = True,
+                steps: int = 80, seq_len: int = 32, batch: int = 16,
+                lr: float = 2e-3, seed: int = 0, params=None,
+                trainable_mask=None, cfg=None) -> tuple[Session, dict]:
+    """Fine-tuned classification ``Session`` + its finetune report."""
+    if cfg is None:
+        cfg = cls_config(arch, mpo=mpo)
+    if params is not None:
+        session = Session(cfg, params)
+    else:
+        session = Session.init(cfg, seed=seed)
+    result = session.finetune(mode=mode, steps=steps, lr=lr, seq_len=seq_len,
+                              batch_size=batch, seed=seed,
+                              mask=trainable_mask)
+    return session, result
+
+
+def finetune_cls(arch: str, *, seq_len: int = 32, batch: int = 16,
+                 seed: int = 0, **kw):
     """Fine-tune a smoke-scale classifier on the GLUE-analog task.
 
     Returns (final params, eval accuracy, trainable count, total count, cfg).
     """
-    import dataclasses
-    if cfg is None:
-        cfg = configs.smoke_config(arch, num_classes=2)
-        if not mpo:
-            cfg = dataclasses.replace(
-                cfg, mpo=dataclasses.replace(cfg.mpo, enabled=False))
-    model = M.build(cfg)
-    if params is None:
-        params, _ = model.init_params(jax.random.PRNGKey(seed))
-    mask = (trainable_mask if trainable_mask is not None
-            else lightweight.trainable_mask(params, mode=mode))
-    tr, tot = lightweight.count_trainable(params, mask)
-    opt = optim.adamw(lr, mask=mask)
-    state = TrainState(params, opt.init(params))
-    loss_fn = make_cls_loss(cfg)
-    step = jax.jit(make_train_step(model, opt, loss_fn=loss_fn))
-    ds = SyntheticCLS(cfg.vocab_size, seq_len, batch, seed=seed)
-    for i in range(steps):
-        b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-        state, metrics = step(state, b)
-    # eval on held-out steps
-    accs = []
-    eval_fn = jax.jit(lambda p, b: make_cls_loss(cfg)(p, b)[1]["acc"])
-    for i in range(1000, 1010):
-        b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-        accs.append(float(eval_fn(state.params, b)))
-    return state.params, float(np.mean(accs)), tr, tot, cfg
+    session, result = cls_session(arch, seq_len=seq_len, batch=batch,
+                                  seed=seed, **kw)
+    acc = session.evaluate(num_batches=10, seq_len=seq_len,
+                           batch_size=batch, seed=seed)
+    return (session.params, acc, result["trainable"], result["total"],
+            session.cfg)
 
 
 def eval_cls(cfg, params, *, seq_len=32, batch=16, seed=0):
-    ds = SyntheticCLS(cfg.vocab_size, seq_len, batch, seed=seed)
-    eval_fn = jax.jit(lambda p, b: make_cls_loss(cfg)(p, b)[1]["acc"])
-    accs = []
-    for i in range(1000, 1010):
-        b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-        accs.append(float(eval_fn(params, b)))
-    return float(np.mean(accs))
+    return Session(cfg, params).evaluate(
+        num_batches=10, seq_len=seq_len, batch_size=batch, seed=seed)

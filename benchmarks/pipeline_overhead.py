@@ -1,0 +1,167 @@
+"""Pipeline-facade overhead benchmark: ``Session`` vs hand-wired steps.
+
+The ``Session`` lifecycle API composes exactly the same jitted step
+functions the examples used to wire by hand (mask -> masked adamw ->
+``make_train_step``; ``make_serve_steps`` -> decode loop).  This harness
+measures both paths over identical weights/batches and appends the ratio to
+``BENCH_engine.json`` — the facade must add no measurable overhead.
+
+Run:  PYTHONPATH=src python -m benchmarks.pipeline_overhead
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ARCH = "qwen3-14b"
+TRAIN_STEPS = 30
+BATCH = 8
+SEQ = 32
+DECODE_TOKENS = 32
+REPS = 3
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_engine.json")
+
+
+def _bench_train_handwired(cfg) -> float:
+    """Steps/s of the pre-pipeline wiring (what quickstart.py used to do)."""
+    from repro import optim
+    from repro.configs.base import ShapeConfig
+    from repro.core import lightweight
+    from repro.data.pipeline import make_batch_fn
+    from repro.models import model as M
+    from repro.train.steps import TrainState, make_train_step
+
+    model = M.build(cfg)
+    params, _ = model.init_params(jax.random.PRNGKey(0))
+    mask = lightweight.trainable_mask(params, mode="lfa")
+    opt = optim.adamw(2e-3, mask=mask)
+    state = TrainState(params, opt.init(params))
+    step = jax.jit(make_train_step(model, opt))
+    bf = make_batch_fn(cfg, ShapeConfig("bench", "train", SEQ, BATCH))
+    # per-step host batch generation stays in the loop — that is what the
+    # hand-wired examples did, and what Session's loop does too
+    state, _ = step(state, {k: jnp.asarray(v) for k, v in bf(0).items()})
+    jax.block_until_ready(state.params)  # warm the jit
+    best = float("inf")
+    for _ in range(REPS):
+        s = state
+        t0 = time.perf_counter()
+        for i in range(TRAIN_STEPS):
+            b = {k: jnp.asarray(v) for k, v in bf(i).items()}
+            s, _ = step(s, b)
+        jax.block_until_ready(s.params)
+        best = min(best, time.perf_counter() - t0)
+    return TRAIN_STEPS / best
+
+
+def _bench_train_session(cfg) -> float:
+    """Steps/s through ``Session.finetune`` (includes ALL facade overhead:
+    stage bookkeeping, loop logging hooks, host->device batch conversion)."""
+    from repro import Session
+
+    session = Session.init(cfg)
+    session.finetune(steps=1, seq_len=SEQ, batch_size=BATCH)  # warm the jit
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        session.finetune(steps=TRAIN_STEPS, seq_len=SEQ, batch_size=BATCH)
+        jax.block_until_ready(session.params)
+        best = min(best, time.perf_counter() - t0)
+    return TRAIN_STEPS / best
+
+
+def _bench_decode_handwired(cfg) -> float:
+    from repro.configs.base import ShapeConfig
+    from repro.models import model as M
+    from repro.train.steps import make_serve_steps
+
+    model = M.build(cfg)
+    params, _ = model.init_params(jax.random.PRNGKey(0))
+    prefill_step, decode_step, init_serve = make_serve_steps(model)
+    prefill_step, decode_step = jax.jit(prefill_step), jax.jit(decode_step)
+    sparams, cache = init_serve(params, BATCH, SEQ + DECODE_TOKENS + 1)
+    batch = {k: jnp.asarray(v) for k, v in M.make_batch(
+        cfg, ShapeConfig("bench", "prefill", SEQ, BATCH)).items()}
+    logits, cache = prefill_step(sparams, batch, cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    _ = jax.block_until_ready(decode_step(sparams, tok, cache))  # warm
+    best = float("inf")
+    for _ in range(REPS):
+        t, c = tok, cache
+        t0 = time.perf_counter()
+        for _ in range(DECODE_TOKENS):
+            t, _, c = decode_step(sparams, t, c)
+        jax.block_until_ready(t)
+        best = min(best, time.perf_counter() - t0)
+    return BATCH * DECODE_TOKENS / best
+
+
+def _bench_decode_session(cfg) -> float:
+    from repro import Session
+    from repro.configs.base import ShapeConfig
+    from repro.models import model as M
+
+    session = Session.init(cfg)
+    handle = session.serve(BATCH, SEQ + DECODE_TOKENS + 1)
+    batch = M.make_batch(cfg, ShapeConfig("bench", "prefill", SEQ, BATCH))
+    logits = handle.prefill(batch)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    _ = jax.block_until_ready(handle.decode(tok))  # warm
+    cache0 = handle.cache
+    best = float("inf")
+    for _ in range(REPS):
+        handle.cache = cache0
+        t = tok
+        t0 = time.perf_counter()
+        for _ in range(DECODE_TOKENS):
+            t, _ = handle.decode(t)
+        jax.block_until_ready(t)
+        best = min(best, time.perf_counter() - t0)
+    return BATCH * DECODE_TOKENS / best
+
+
+def run() -> list[str]:
+    from repro import configs
+
+    cfg = configs.smoke_config(ARCH)
+    train_hw = _bench_train_handwired(cfg)
+    train_ses = _bench_train_session(cfg)
+    dec_hw = _bench_decode_handwired(cfg)
+    dec_ses = _bench_decode_session(cfg)
+
+    result = {
+        "arch": ARCH, "train_steps": TRAIN_STEPS,
+        "decode_tokens": DECODE_TOKENS, "batch": BATCH,
+        "train_steps_s_handwired": round(train_hw, 2),
+        "train_steps_s_session": round(train_ses, 2),
+        "train_overhead": round(train_hw / train_ses - 1.0, 4),
+        "decode_tok_s_handwired": round(dec_hw, 1),
+        "decode_tok_s_session": round(dec_ses, 1),
+        "decode_overhead": round(dec_hw / dec_ses - 1.0, 4),
+    }
+    # append next to the engine-mode results
+    data = {}
+    if os.path.exists(_JSON_PATH):
+        with open(_JSON_PATH) as f:
+            data = json.load(f)
+    data["pipeline_overhead"] = result
+    with open(_JSON_PATH, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+    return [
+        f"pipeline,train,handwired={train_hw:.2f}steps/s,"
+        f"session={train_ses:.2f}steps/s,overhead={result['train_overhead']:+.1%}",
+        f"pipeline,decode,handwired={dec_hw:.1f}tok/s,"
+        f"session={dec_ses:.1f}tok/s,overhead={result['decode_overhead']:+.1%}",
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

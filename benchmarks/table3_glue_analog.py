@@ -13,15 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-
-from repro import configs, optim
-from repro.core import lightweight, squeeze
-from repro.data.pipeline import SyntheticCLS
-from repro.models import model as M
-from repro.train.steps import TrainState, make_cls_loss, make_train_step
-from benchmarks.common import eval_cls, finetune_cls
+from repro.core import lightweight
+from benchmarks.common import cls_config, cls_session, finetune_cls
 
 STEPS = 70
 
@@ -39,7 +32,7 @@ def run() -> list[str]:
     rows.append(_row("albert_rep", acc, tr, tot))
 
     # full-rank MPO (bond=None), full FT vs LFA
-    full_cfg = configs.smoke_config("albert-base", num_classes=2)
+    full_cfg = cls_config("albert-base")
     full_cfg = dataclasses.replace(
         full_cfg, mpo=dataclasses.replace(full_cfg.mpo, bond_embed=None,
                                           bond_attn=None, bond_ffn=None))
@@ -54,34 +47,17 @@ def run() -> list[str]:
     _, acc, tr, tot, _ = finetune_cls("albert-base", mode="lfa", steps=STEPS)
     rows.append(_row("mpop_dir", acc, tr, tot))
 
-    # MPOP: LFA fine-tune, then dimension-squeeze with short LFA re-tunes
-    params, acc0, tr, tot, cfg = finetune_cls("albert-base", mode="lfa",
-                                              steps=STEPS)
-    model = M.build(cfg)
-    ds = SyntheticCLS(cfg.vocab_size, 32, 16, seed=0)
-    loss_fn = make_cls_loss(cfg)
-
-    def finetune(p):
-        mask = lightweight.trainable_mask(p, mode="lfa")
-        opt = optim.adamw(1e-3, mask=mask)
-        state = TrainState(p, opt.init(p))
-        step = jax.jit(make_train_step(model, opt, loss_fn=loss_fn))
-        for i in range(15):
-            b = {k: jnp.asarray(v) for k, v in ds.batch(2000 + i).items()}
-            state, _ = step(state, b)
-        return state.params
-
-    def evaluate(p):
-        return eval_cls(cfg, p)
-
-    squeezed, hist = squeeze.run_dimension_squeezing(
-        params, finetune, evaluate, delta=0.08, max_iters=6)
-    acc = eval_cls(cfg, squeezed)
-    mask = lightweight.trainable_mask(squeezed, mode="lfa")
-    tr2, tot2 = lightweight.count_trainable(squeezed, mask)
+    # MPOP: LFA fine-tune, then dimension-squeeze with short LFA re-tunes —
+    # the full Session lifecycle (finetune -> squeeze -> report)
+    session, _ = cls_session("albert-base", mode="lfa", steps=STEPS)
+    hist = session.squeeze(delta=0.08, max_iters=6, finetune_steps=15,
+                           lr=1e-3)
+    acc = session.evaluate(num_batches=10)
+    mask = lightweight.trainable_mask(session.params, mode="lfa")
+    tr2, tot2 = lightweight.count_trainable(session.params, mask)
     rows.append(_row("mpop", acc, tr2, tot2))
     rows.append(f"table3,squeeze_events,{len(hist)},"
-                f"rho={squeeze.model_compression_ratio(squeezed):.3f}")
+                f"rho={session.report()['compression_ratio']:.3f}")
     return rows
 
 

@@ -7,10 +7,9 @@ from __future__ import annotations
 
 import jax
 
-from repro import configs
+from repro import Session
 from repro.core import lightweight
-from repro.models import model as M
-from benchmarks.common import finetune_cls
+from benchmarks.common import cls_config, finetune_cls
 
 STEPS = 60
 
@@ -35,12 +34,8 @@ def _last_layers_mask(params, cfg, k: int):
 
 def run() -> list[str]:
     rows = []
-    import dataclasses
-    cfg = configs.smoke_config("bert-base", num_classes=2)
-    dense_cfg = dataclasses.replace(
-        cfg, mpo=dataclasses.replace(cfg.mpo, enabled=False))
-    model = M.build(dense_cfg)
-    params0, _ = model.init_params(jax.random.PRNGKey(0))
+    dense_cfg = cls_config("bert-base", mpo=False)
+    params0 = Session.init(dense_cfg).params
     for k in (0, 1):
         mask = _last_layers_mask(params0, dense_cfg, k)
         tr, tot = lightweight.count_trainable(params0, mask)

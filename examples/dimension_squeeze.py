@@ -1,66 +1,34 @@
-"""Dimension squeezing (paper Algorithm 2), end to end.
+"""Dimension squeezing (paper Algorithm 2), end to end, via ``Session``.
 
 Fine-tunes an MPO-compressed classifier, then repeatedly truncates the one
 bond with the least predicted reconstruction error (Eq. 3 fast estimate),
 re-tuning the auxiliary tensors between squeezes, until the metric gap
-exceeds delta.
+exceeds delta.  Every evaluation inside the squeeze loop runs on a freshly
+contracted weight snapshot — a cached dense W never outlives a truncation.
 
 Run:  PYTHONPATH=src python examples/dimension_squeeze.py
 """
 
-import jax
-import jax.numpy as jnp
-
-from repro import configs, optim
-from repro.core import lightweight, squeeze
-from repro.data.pipeline import SyntheticCLS
-from repro.models import model as M
-from repro.train.steps import TrainState, make_cls_loss, make_train_step
+from repro import Session
 
 
 def main():
-    cfg = configs.smoke_config("albert-base", num_classes=2)
-    model = M.build(cfg)
-    params, _ = model.init_params(jax.random.PRNGKey(0))
-    ds = SyntheticCLS(cfg.vocab_size, 32, 16, seed=0)
-    loss_fn = make_cls_loss(cfg)
-
-    def tune(p, steps, lr=2e-3):
-        mask = lightweight.trainable_mask(p, mode="lfa")
-        opt = optim.adamw(lr, mask=mask)
-        state = TrainState(p, opt.init(p))
-        step = jax.jit(make_train_step(model, opt, loss_fn=loss_fn))
-        for i in range(steps):
-            b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-            state, _ = step(state, b)
-        return state.params
-
-    eval_fn = jax.jit(lambda p, b: loss_fn(p, b)[1]["acc"])
-
-    def evaluate(p):
-        accs = []
-        for i in range(1000, 1008):
-            b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-            accs.append(float(eval_fn(p, b)))
-        return sum(accs) / len(accs)
+    session = Session.init("albert-base", num_classes=2)
 
     print("[squeeze] initial LFA fine-tune...")
-    params = tune(params, 60)
-    acc0 = evaluate(params)
-    rho0 = squeeze.model_compression_ratio(params)
+    session.finetune(mode="lfa", steps=60, lr=2e-3)
+    acc0 = session.evaluate()
+    rho0 = session.report()["compression_ratio"]
     print(f"[squeeze] start: acc={acc0:.3f} rho={rho0:.3f}")
 
-    params, hist = squeeze.run_dimension_squeezing(
-        params,
-        finetune_fn=lambda p: tune(p, 12),
-        eval_fn=evaluate,
-        delta=0.08, max_iters=8, verbose=True)
+    history = session.squeeze(delta=0.08, max_iters=8, finetune_steps=12,
+                              lr=2e-3, verbose=True)
 
-    print(f"[squeeze] done: {len(hist)} squeezes, "
-          f"acc={evaluate(params):.3f}, "
-          f"rho={squeeze.model_compression_ratio(params):.3f} "
-          f"(was {rho0:.3f})")
-    for ev in hist:
+    report = session.report()
+    print(f"[squeeze] done: {len(history)} squeezes, "
+          f"acc={session.evaluate():.3f}, "
+          f"rho={report['compression_ratio']:.3f} (was {rho0:.3f})")
+    for ev in history:
         print(f"  step {ev.step}: layer={'/'.join(map(str, ev.layer))} "
               f"bond{ev.bond}->{ev.new_dim} eps={ev.predicted_error:.3g} "
               f"metric={ev.metric:.3f}")

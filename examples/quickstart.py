@@ -2,8 +2,9 @@
 
   1. MPO-decompose a weight matrix (Algorithm 1), inspect compression ratio,
      truncation-error bound (Eq. 4) and per-bond entanglement entropy (Eq. 6).
-  2. Build an MPO-parameterized LM and lightweight-fine-tune ONLY the
-     auxiliary tensors (paper §4.1) on synthetic data.
+  2. The same workflow at model level through the public lifecycle API:
+     ``Session`` fine-tunes ONLY the auxiliary tensors (paper §4.1) on
+     synthetic data — five lines from config to report.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,12 +12,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro import configs, optim
-from repro.configs.base import ShapeConfig
-from repro.core import lightweight, mpo
-from repro.data.pipeline import make_batch_fn
-from repro.models import model as M
-from repro.train.steps import TrainState, make_train_step
+from repro import Session
+from repro.core import mpo
 
 
 def part1_decompose():
@@ -39,26 +36,20 @@ def part1_decompose():
 
 def part2_lfa():
     print("== 2. Lightweight fine-tuning (auxiliary tensors only) ==")
-    cfg = configs.smoke_config("qwen3-14b")
-    shape = ShapeConfig("qs", "train", 64, 8)
-    model = M.build(cfg)
-    params, _ = model.init_params(jax.random.PRNGKey(0))
-    mask = lightweight.trainable_mask(params, mode="lfa")
-    tr, tot = lightweight.count_trainable(params, mask)
-    print(f"  params {tot:,}  trainable (aux only) {tr:,} "
-          f"({tr / tot:.1%} -> {1 - tr / tot:.1%} reduction)")
-    opt = optim.adamw(3e-3, mask=mask)
-    state = TrainState(params, opt.init(params))
-    step = jax.jit(make_train_step(model, opt))
-    bf = make_batch_fn(cfg, shape)
-    for i in range(20):
-        batch = {k: jnp.asarray(v) for k, v in bf(i).items()}
-        state, m = step(state, batch)
-        if i % 5 == 0 or i == 19:
-            print(f"  step {i:3d}  loss {float(m['loss']):.4f}")
-    frozen = jnp.all(state.params["layers"]["attn"]["wq"]["cores"]["central"]
-                     == params["layers"]["attn"]["wq"]["cores"]["central"])
-    print(f"  central tensors untouched: {bool(frozen)}")
+    # the whole workflow is the Session lifecycle: init -> finetune -> report
+    session = Session.init("qwen3-14b")
+    before = session.params["layers"]["attn"]["wq"]["cores"]["central"]
+    result = session.finetune(mode="lfa", steps=20, lr=3e-3, seq_len=64,
+                              batch_size=8)
+    report = session.report()
+    print(f"  params {report['params_total']:,}  trainable (aux only) "
+          f"{report['trainable']:,} "
+          f"(-> {report['trainable_reduction']:.1%} reduction)")
+    print(f"  loss {result['loss_first']:.4f} -> {result['loss_final']:.4f} "
+          f"over {result['steps']} steps")
+    # the central tensors really were untouched (mask == graph behavior)
+    after = session.params["layers"]["attn"]["wq"]["cores"]["central"]
+    print(f"  central tensors untouched: {bool(jnp.all(before == after))}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,10 @@
-"""Batched serving demo: prefill a batch of prompts, then decode tokens
-against KV caches (or SSM states) — exercises the same ``serve_step`` paths
-the decode/prefill dry-run cells lower.
+"""Batched serving demo via ``Session.serve``: prefill a batch of prompts,
+then decode tokens against KV caches (or SSM states) — exercises the same
+``serve_step`` paths the decode/prefill dry-run cells lower.
+
+``Session.serve`` performs the one-time serving init (KV-cache allocation +
+cached-W weight contraction) and returns a handle whose decode loop does
+zero per-step core contractions.
 
 Run:  PYTHONPATH=src python examples/serve.py --arch qwen3-14b --tokens 16
       PYTHONPATH=src python examples/serve.py --arch mamba2-130m
@@ -12,10 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import Session, configs
 from repro.configs.base import ShapeConfig
 from repro.models import model as M
-from repro.train.steps import make_serve_steps
 
 
 def main():
@@ -29,33 +32,22 @@ def main():
                          "(re-contracts cores per decode step)")
     args = ap.parse_args()
 
-    cfg = configs.smoke_config(args.arch)
-    model = M.build(cfg)
-    params, _ = model.init_params(jax.random.PRNGKey(0))
-    prefill_step, decode_step, init_serve = make_serve_steps(
-        model, weight_cache=not args.no_weight_cache)
-    prefill_step = jax.jit(prefill_step)
-    decode_step = jax.jit(decode_step)
+    session = Session.init(args.arch)
+    handle = session.serve(args.batch, args.prompt_len + args.tokens,
+                           weight_cache=not args.no_weight_cache)
 
-    shape = ShapeConfig("serve", "prefill", args.prompt_len, args.batch)
-    batch = {k: jnp.asarray(v)
-             for k, v in M.make_batch(cfg, shape).items()}
-    # one-time serving init: KV cache + cached-W weight contraction — the
-    # decode loop below performs zero per-step core contractions
+    batch = M.make_batch(session.cfg,
+                         ShapeConfig("serve", "prefill", args.prompt_len,
+                                     args.batch))
     t0 = time.perf_counter()
-    params, cache = jax.block_until_ready(
-        init_serve(params, args.batch, args.prompt_len + args.tokens))
-    t_init = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    logits, cache = jax.block_until_ready(prefill_step(params, batch, cache))
+    logits = jax.block_until_ready(handle.prefill(batch))
     t_prefill = time.perf_counter() - t0
     tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
 
     out = [tok]
     t0 = time.perf_counter()
     for _ in range(args.tokens - 1):
-        tok, logits, cache = decode_step(params, tok, cache)
+        tok, logits = handle.decode(tok)
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
@@ -66,7 +58,7 @@ def main():
           f"weight_cache={not args.no_weight_cache}")
     what = ("KV cache + cached-W contraction" if not args.no_weight_cache
             else "KV cache only")
-    print(f"[serve] init    {t_init * 1e3:.1f} ms ({what})")
+    print(f"[serve] init    {handle.init_seconds * 1e3:.1f} ms ({what})")
     print(f"[serve] prefill {t_prefill * 1e3:.1f} ms "
           f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
     print(f"[serve] decode  {t_decode * 1e3:.1f} ms "

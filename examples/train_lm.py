@@ -1,5 +1,7 @@
 """End-to-end training driver: train an MPO-compressed LM for a few hundred
-steps with checkpoint/restart, LFA, LR schedule and logging.
+steps with checkpoint/restart, LFA, LR schedule and logging — all through
+``Session.finetune`` (checkpoint/resume comes from the underlying
+fault-tolerant loop; re-running the same command resumes).
 
 Default preset is CPU-sized; ``--preset 100m`` builds a ~100M-param model
 (the assignment's reference scale — practical on accelerators).
@@ -10,16 +12,7 @@ Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-
-from repro import configs, optim
-from repro.configs.base import ShapeConfig
-from repro.core import lightweight
-from repro.data.pipeline import make_batch_fn
-from repro.models import model as M
-from repro.train.loop import LoopConfig, run_training
-from repro.train.steps import TrainState, make_train_step
+from repro import Session
 
 PRESETS = {
     # ~2M params: CPU-friendly demo
@@ -42,28 +35,19 @@ def main():
     ap.add_argument("--finetune", choices=["lfa", "full"], default="lfa")
     args = ap.parse_args()
 
-    cfg = configs.smoke_config("qwen3-14b", **PRESETS[args.preset],
-                               remat=False, dtype="float32")
-    shape = ShapeConfig("ex", "train", args.seq_len, args.batch)
-    model = M.build(cfg)
-    params, _ = model.init_params(jax.random.PRNGKey(0))
-    mask = lightweight.trainable_mask(params, mode=args.finetune)
-    tr, tot = lightweight.count_trainable(params, mask)
-    print(f"[train_lm] {args.preset}: {tot / 1e6:.1f}M params, "
-          f"{tr / 1e6:.2f}M trainable ({tr / tot:.1%})")
-
-    sched = optim.cosine_warmup(args.lr, warmup=20, total=args.steps)
-    opt = optim.adamw(sched, mask=mask)
-    state = TrainState(params, opt.init(params))
-    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
-    bf = make_batch_fn(cfg, shape)
-    loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=50, log_every=20)
-    state, hist = run_training(
-        step, state, bf, loop,
-        to_device=lambda b: {k: jnp.asarray(v) for k, v in b.items()})
-    print(f"[train_lm] done; final loss {hist[-1]['loss']:.4f}"
-          if hist else "[train_lm] resumed past end")
+    session = Session.init("qwen3-14b", **PRESETS[args.preset],
+                           remat=False, dtype="float32")
+    result = session.finetune(
+        mode=args.finetune, steps=args.steps, lr=args.lr, warmup=20,
+        seq_len=args.seq_len, batch_size=args.batch,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=20,
+        donate=True, verbose=True)
+    print(f"[train_lm] {args.preset}: {result['total'] / 1e6:.1f}M params, "
+          f"{result['trainable'] / 1e6:.2f}M trainable "
+          f"({result['trainable'] / result['total']:.1%})")
+    print(f"[train_lm] done; final loss {result['loss_final']:.4f}"
+          if result["loss_final"] is not None
+          else "[train_lm] resumed past end")
 
 
 if __name__ == "__main__":

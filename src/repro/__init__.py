@@ -1,0 +1,78 @@
+"""repro — MPO-based pre-trained language model compression (MPOP).
+
+Reproduction of "Enabling Lightweight Fine-tuning for Pre-trained Language
+Model Compression based on Matrix Product Operators" (ACL 2021), grown into
+a JAX/Pallas serving-scale system.
+
+Stable public surface
+---------------------
+``Session``            the stage-based lifecycle API (init/from_dense ->
+                       finetune -> squeeze -> serve -> report)
+``ServeHandle``        bound prefill/decode serving handle
+``MPOConfig``          how (and whether) matrices are MPO-factorized
+``MPOEngine`` / ``engine_for`` / ``ExecutionPlan`` / ``choose_mode``
+                       the phase-aware execution engine
+``configs``            architecture registry (``configs.get_config`` /
+                       ``configs.smoke_config``)
+``optim``              masked optimizers (LFA), schedules, EF compression
+
+Everything else (``repro.core.*``, ``repro.train.*``, ``repro.models.*``,
+``repro.kernels.*``) is the low-level API underneath — stable enough to
+build on, but ``Session`` is the documented entry point:
+
+    from repro import Session
+    s = Session.init("qwen3-14b")
+    s.finetune(mode="lfa", steps=60)
+    s.squeeze(delta=0.05, max_iters=8)
+    handle = s.serve(batch_size=8, max_len=64)
+    print(s.report())
+
+Exports resolve lazily (PEP 562) so ``import repro`` stays cheap and the
+subpackages keep importing each other without cycles.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+__all__ = [
+    "Session", "ServeHandle", "StageRecord", "STAGES",
+    "MPOConfig", "DENSE",
+    "MPOEngine", "ExecutionPlan", "engine_for", "choose_mode",
+    "ModelConfig", "ShapeConfig",
+    "configs", "optim", "pipeline",
+]
+
+_EXPORTS = {
+    "Session": "repro.pipeline",
+    "ServeHandle": "repro.pipeline",
+    "StageRecord": "repro.pipeline",
+    "STAGES": "repro.pipeline",
+    "MPOConfig": "repro.core.layers",
+    "DENSE": "repro.core.layers",
+    "MPOEngine": "repro.core.engine",
+    "ExecutionPlan": "repro.core.engine",
+    "engine_for": "repro.core.engine",
+    "choose_mode": "repro.core.engine",
+    "ModelConfig": "repro.configs.base",
+    "ShapeConfig": "repro.configs.base",
+    # subpackages, importable as attributes for discoverability
+    "configs": "repro.configs",
+    "optim": "repro.optim",
+    "pipeline": "repro.pipeline",
+}
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    module = importlib.import_module(target)
+    value = module if target.rsplit(".", 1)[-1] == name \
+        else getattr(module, name)
+    globals()[name] = value  # cache: __getattr__ runs once per name
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,1 @@
+"""Checkpoint save/restore with async writes and retention."""

@@ -306,7 +306,7 @@ class MPOEngine:
 
     # ---- serving-time weight cache ----
 
-    def cache_weights(self, params, *, dtype=None):
+    def cache_weights(self, params, *, dtype=None, axes=None):
         """One-time densification at serving init (next to the KV cache).
 
         Returns a new params tree where every factorized matrix whose decode
@@ -315,8 +315,15 @@ class MPOEngine:
         dense weights) passes through untouched.  Handles scan-stacked layer
         and MoE-expert leading dims.  The result is a SNAPSHOT: re-run after
         any core mutation (``tt_round``, dimension squeezing, training).
+
+        When ``axes`` (the logical-axis tree from ``split_annotations``) is
+        given, returns ``(params, axes)`` instead: the densified W inherits
+        the cores' TP layout — its (in, out) dims carry whatever logical
+        names annotated the cores' i/j legs, and stacked leading dims keep
+        their axes — so ``parallel.sharding.tree_shardings`` places the
+        cached dense W exactly where the cores' shards lived.
         """
-        def visit(node):
+        def visit(node, ax):
             if isinstance(node, dict):
                 if "cores" in node:
                     from repro.core import layers  # lazy
@@ -324,14 +331,40 @@ class MPOEngine:
                     shapes = tuple(c.shape[-4:] for c in cores)
                     plan = self.plan(shapes, 1, "decode")
                     if plan.mode != "cached":
-                        return node
+                        return node, ax
                     w = _reconstruct_stacked(cores)
                     if dtype is not None:
                         w = w.astype(dtype)
-                    return {"w": w}
-                return {k: visit(v) for k, v in node.items()}
-            return node
-        return visit(params)
+                    new_ax = ax
+                    if ax is not None:
+                        new_ax = {"w": _dense_axes_from_cores(
+                            [ax["cores"][n] for n in
+                             layers.core_names(len(cores))])}
+                    return {"w": w}, new_ax
+                out, out_ax = {}, {}
+                for k, v in node.items():
+                    out[k], out_ax[k] = visit(v, None if ax is None
+                                              else ax[k])
+                return out, (None if ax is None else out_ax)
+            return node, ax
+        new_params, new_axes = visit(params, axes)
+        return new_params if axes is None else (new_params, new_axes)
+
+
+def _dense_axes_from_cores(core_axes: Sequence[tuple]) -> tuple:
+    """Logical axes of the contracted dense W, inherited from its cores.
+
+    Each core's trailing four legs are (bond, i, j, bond); W's in/out dims
+    take the first non-``None`` name found on any core's i/j leg (at most one
+    core carries the TP annotation — see ``layers._core_axes``).  Leading
+    stacked dims (scan layers, MoE experts) keep their names.  Bond-leg
+    names (the central core's FSDP ``"bond"``) do not survive densification:
+    the bond dim is contracted away.
+    """
+    lead = tuple(core_axes[0][:-4])
+    in_axis = next((a[-3] for a in core_axes if a[-3] is not None), None)
+    out_axis = next((a[-2] for a in core_axes if a[-2] is not None), None)
+    return lead + (in_axis, out_axis)
 
 
 @functools.lru_cache(maxsize=None)

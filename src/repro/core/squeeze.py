@@ -140,17 +140,29 @@ def run_dimension_squeezing(
     step: int = 1,
     min_bond: int = 1,
     verbose: bool = False,
+    weight_cache: Callable | None = None,
 ):
-    """Paper Algorithm 2.  Returns (params, history)."""
+    """Paper Algorithm 2.  Returns (params, history).
+
+    ``weight_cache`` (e.g. ``MPOEngine.cache_weights`` /
+    ``Model.cache_weights``) makes every evaluation run on a freshly
+    densified serving snapshot: the snapshot is REBUILT from the current
+    cores after each truncation + fine-tune, so a stale cached W — one
+    contracted before the bond was squeezed — is never consulted.  Without
+    it, evaluations see the raw factorized params (no snapshot exists to go
+    stale).
+    """
+    ev = eval_fn if weight_cache is None \
+        else (lambda p: eval_fn(weight_cache(p)))
     history: list[SqueezeEvent] = []
-    p0 = float(eval_fn(params))
+    p0 = float(ev(params))
     best_params = params
     for it in range(max_iters):
         new_params, info = squeeze_once(params, step=step, min_bond=min_bond)
         if info is None:
             break
         new_params = finetune_fn(new_params)
-        metric = float(eval_fn(new_params))
+        metric = float(ev(new_params))
         history.append(SqueezeEvent(it, info["layer"], info["bond"],
                                     info["new_dim"], info["predicted_error"],
                                     metric))

@@ -1,0 +1,1 @@
+"""Dry-run lowering, HLO analysis, mesh/roofline tooling."""

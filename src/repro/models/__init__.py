@@ -1,0 +1,2 @@
+"""Model families (transformer / MoE / SSM / hybrid / enc-dec) behind the
+unified ``repro.models.model.build`` dispatch."""

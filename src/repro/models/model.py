@@ -33,11 +33,13 @@ class Model:
         """(params, axes) — values split from logical-axis annotations."""
         return L.split_annotations(self.init(key))
 
-    def cache_weights(self, params):
+    def cache_weights(self, params, *, axes=None):
         """Serving-time weight cache: contract decode-``cached`` matrices to
-        dense W once (done at serving init, next to the KV cache)."""
+        dense W once (done at serving init, next to the KV cache).  With
+        ``axes`` returns ``(params, axes)`` — the dense W inherits the cores'
+        TP layout (see ``MPOEngine.cache_weights``)."""
         from repro.core.engine import engine_for
-        return engine_for(self.cfg.mpo).cache_weights(params)
+        return engine_for(self.cfg.mpo).cache_weights(params, axes=axes)
 
 
 def build(cfg: ModelConfig) -> Model:

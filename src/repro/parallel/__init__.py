@@ -1,0 +1,1 @@
+"""Mesh context + logical-axis sharding rules."""

@@ -1,0 +1,7 @@
+"""Stage-based public API for the compress -> fine-tune -> squeeze -> serve
+lifecycle.  ``Session`` is the documented entry point (``from repro import
+Session``); the layer-level modules under ``repro.core`` / ``repro.train``
+remain the low-level escape hatch."""
+
+from repro.pipeline.session import (STAGES, ServeHandle,  # noqa: F401
+                                    Session, StageRecord)

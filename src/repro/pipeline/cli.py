@@ -1,0 +1,66 @@
+"""``repro-pipeline``: the full paper workflow from the command line.
+
+Runs the ``Session`` lifecycle on a smoke-scale architecture: init (or the
+ALBERT classification subject), lightweight fine-tune, optional dimension
+squeezing, a short greedy generation through the serving path, and the final
+stage report as JSON.
+
+Run:  repro-pipeline --arch qwen3-14b --steps 40 --tokens 8
+      repro-pipeline --arch albert-base --cls --squeeze
+      (or: python -m repro.pipeline.cli ...)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None):
+    from repro import configs
+    from repro.pipeline import Session
+
+    ap = argparse.ArgumentParser(prog="repro-pipeline", description=__doc__)
+    ap.add_argument("--arch", default="qwen3-14b", choices=list(configs.ARCHS))
+    ap.add_argument("--cls", action="store_true",
+                    help="classification task (adds a 2-class head; the "
+                         "paper's GLUE-analog setting)")
+    ap.add_argument("--mode", default="lfa",
+                    choices=["lfa", "full", "central_only"])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--squeeze", action="store_true",
+                    help="run dimension squeezing (Algorithm 2) after the "
+                         "fine-tune")
+    ap.add_argument("--delta", type=float, default=0.08)
+    ap.add_argument("--max-iters", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=8,
+                    help="tokens to decode through the serving path "
+                         "(LM tasks only; 0 disables)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    overrides = {"num_classes": 2} if args.cls else {}
+    session = Session.init(args.arch, **overrides)
+    session.finetune(mode=args.mode, steps=args.steps, lr=args.lr,
+                     ckpt_dir=args.ckpt_dir, verbose=args.verbose)
+    if args.squeeze:
+        session.squeeze(delta=args.delta, max_iters=args.max_iters,
+                        verbose=args.verbose)
+    if args.tokens and session.task == "lm":
+        from repro.configs.base import ShapeConfig
+        from repro.models import model as M
+        handle = session.serve(args.batch,
+                               args.prompt_len + args.tokens + 1)
+        batch = M.make_batch(session.cfg, ShapeConfig(
+            "cli", "prefill", args.prompt_len, args.batch))
+        ids = handle.generate(batch, args.tokens)
+        print(f"[repro-pipeline] sample ids: {ids[0].tolist()}")
+    print(json.dumps(session.report(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,456 @@
+"""``Session``: the stage-based lifecycle API for the paper's workflow.
+
+The paper's contribution is a *pipeline* — decompose a pretrained model into
+central + auxiliary tensors (Algorithm 1), fine-tune only the auxiliary
+tensors (§4.1), dimension-squeeze the bonds (Algorithm 2), then serve the
+compressed model.  Historically every example re-wired that pipeline by hand
+(configs + ``model.build`` + ``trainable_mask`` + masked optimizer + jitted
+steps + ``make_serve_steps``).  ``Session`` is the single object that owns
+the moving parts and the invariants BETWEEN stages:
+
+    Session.init(cfg) ── or ── Session.from_dense(dense_params, cfg)
+        │                          (Alg. 1 conversion + error report)
+        ▼
+    .finetune(mode="lfa")      trainability mask + masked optimizer +
+        │                      jitted train loop (aux tensors only)
+        ▼
+    .squeeze(delta=...)        Algorithm 2; every eval runs on a FRESHLY
+        │                      densified weight snapshot, and any serving
+        ▼                      snapshot taken earlier is invalidated
+    .serve(batch, max_len)     one-time ``init_serve`` (KV cache + cached-W
+        │                      contraction) -> prefill/decode handle
+        ▼
+    .report()                  compression ratio, trainable-param reduction,
+                               conversion error, per-stage wall timings
+
+The invariant the stages protect: a densified ``cache_weights`` tree is a
+snapshot of the cores.  Every mutation (``finetune``, ``squeeze``) bumps the
+session's weights version; ``serve`` compares versions and re-contracts
+instead of reusing a stale W (the ROADMAP open item this module closes).
+The layer-level functions (``repro.core.*``, ``repro.train.steps``) remain
+the low-level escape hatch — ``Session`` only composes them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import convert, lightweight, squeeze as squeeze_mod
+from repro.core import layers as L
+from repro.core.engine import engine_for
+from repro.data.pipeline import SyntheticCLS, make_batch_fn
+from repro.models import model as M
+from repro.optim import optimizers, schedule
+from repro.train.loop import LoopConfig, run_training
+from repro.train.steps import (TrainState, lm_loss, make_cls_loss,
+                               make_serve_steps, make_train_step)
+
+STAGES = ("init", "from_dense", "finetune", "squeeze", "serve")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageRecord:
+    """One completed stage transition, for ``Session.report()``."""
+    stage: str
+    seconds: float
+    info: dict
+
+
+def _to_device(batch: dict) -> dict:
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+class ServeHandle:
+    """A bound serving session: jitted prefill/decode steps over a weight
+    snapshot taken ONCE at construction (``init_serve``: KV-cache allocation
+    + ``MPOEngine.cache_weights`` densification).  Carries the weights
+    version it was built from so ``Session.serve`` can detect staleness."""
+
+    def __init__(self, model, params, batch_size: int, max_len: int, *,
+                 weight_cache: bool = True, version: int = 0):
+        self.batch_size, self.max_len = batch_size, max_len
+        self.weight_cache = weight_cache
+        self.version = version
+        prefill_step, decode_step, init_serve = make_serve_steps(
+            model, weight_cache=weight_cache)
+        t0 = time.perf_counter()
+        self.params, self._cache0 = jax.block_until_ready(
+            init_serve(params, batch_size, max_len))
+        self.init_seconds = time.perf_counter() - t0
+        self._prefill = jax.jit(prefill_step)
+        self._decode = jax.jit(decode_step)
+        self.cache = self._cache0
+
+    def reset(self):
+        """Rewind to the freshly-initialized (empty) KV cache."""
+        self.cache = self._cache0
+        return self
+
+    def prefill(self, batch: dict) -> jax.Array:
+        logits, self.cache = self._prefill(self.params, _to_device(batch),
+                                           self.cache)
+        return logits
+
+    def decode(self, tokens: jax.Array):
+        tok, logits, self.cache = self._decode(self.params, tokens, self.cache)
+        return tok, logits
+
+    def generate(self, batch: dict, num_tokens: int) -> jax.Array:
+        """Greedy generation: prefill the prompt, decode ``num_tokens``.
+        Returns (batch, num_tokens) token ids."""
+        self.reset()
+        logits = self.prefill(batch)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for _ in range(num_tokens - 1):
+            tok, _ = self.decode(tok)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+
+class Session:
+    """Owns params, the ``MPOEngine``, the trainability mask, and weight-
+    cache validity across the compress -> fine-tune -> squeeze -> serve
+    lifecycle.  See the module docstring for the stage diagram."""
+
+    def __init__(self, cfg: ModelConfig, params, axes=None):
+        self.cfg = cfg
+        self.model = M.build(cfg)
+        self.engine = engine_for(cfg.mpo)
+        self.params = params
+        self.axes = axes
+        self.mask = None                  # last trainability mask
+        self.conversion_report: dict = {}
+        self.squeeze_history: list = []
+        self.stage = "init"
+        self._records: list[StageRecord] = []
+        self._version = 0                 # bumped on every core mutation
+        # (batch, max_len, weight_cache) -> ServeHandle, all at _version;
+        # cleared on every bump so a stale snapshot is never reused
+        self._serve: dict[tuple, ServeHandle] = {}
+        self._loss_default: Callable | None = None
+        # (mode, lr, wd, loss id, params treedef) -> (mask, optimizer, step):
+        # reusing the same jitted step across finetune calls / squeeze
+        # re-tunes avoids a re-trace per call (mask values depend only on
+        # tree structure, which is part of the key)
+        self._step_cache: dict = {}
+
+    # ---- constructors ----
+
+    @classmethod
+    def init(cls, cfg: ModelConfig | str, *, seed: int = 0,
+             smoke: bool = True, **overrides) -> "Session":
+        """Fresh MPO-parameterized model.  ``cfg`` may be a ``ModelConfig``
+        or an arch name (``"qwen3-14b"``; ``smoke=True`` scales it down to
+        the CPU-sized config the examples/tests use).  ``overrides`` are
+        config-field replacements and apply either way."""
+        if isinstance(cfg, str):
+            cfg = (configs.smoke_config(cfg, **overrides) if smoke
+                   else configs.get_config(cfg, **overrides))
+        elif overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        t0 = time.perf_counter()
+        model = M.build(cfg)
+        params, axes = model.init_params(jax.random.PRNGKey(seed))
+        s = cls(cfg, params, axes)
+        s._record("init", t0, {"params": lightweight.count_params(params)})
+        return s
+
+    @classmethod
+    def from_dense(cls, dense_params, cfg: ModelConfig, *,
+                   report: bool = True) -> "Session":
+        """The paper's actual workflow: MPO-decompose a *pretrained* dense
+        checkpoint (Algorithm 1) into this config's core layout (bond-
+        truncated per the config), with a per-matrix reconstruction-error
+        report (Eq. 4 drift)."""
+        t0 = time.perf_counter()
+        model = M.build(cfg)
+        template, axes = L.split_annotations(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+        params = convert.convert_dense_to_mpo(dense_params, template)
+        s = cls(cfg, params, axes)
+        s.stage = "from_dense"
+        errs = {}
+        if report:
+            errs = convert.conversion_error(dense_params, params)
+            s.conversion_report = errs
+        s._record("from_dense", t0, {
+            "matrices": len(errs),
+            "max_rel_err": max(errs.values(), default=0.0),
+        })
+        return s
+
+    # ---- stage bookkeeping ----
+
+    def _record(self, stage: str, t0: float, info: dict):
+        self.stage = stage
+        self._records.append(
+            StageRecord(stage, time.perf_counter() - t0, info))
+
+    def _bump(self):
+        """Core mutation: any weight-cache snapshot is now stale."""
+        self._version += 1
+        self._serve.clear()
+
+    @property
+    def weights_version(self) -> int:
+        return self._version
+
+    # ---- task defaults (cls vs lm) ----
+
+    @property
+    def task(self) -> str:
+        return "cls" if self.cfg.num_classes else "lm"
+
+    def _default_loss_fn(self) -> Callable:
+        if self._loss_default is None:
+            self._loss_default = (
+                make_cls_loss(self.cfg) if self.task == "cls"
+                else lambda p, b: lm_loss(self.model, p, b))
+        return self._loss_default
+
+    def _cached_train_step(self, mode: str, lr: float, weight_decay: float,
+                           loss_fn: Callable, params=None):
+        """(mask, optimizer, jitted step) memoized per configuration.  The
+        mask depends only on the params TREE STRUCTURE (part of the key), so
+        squeeze-truncated trees reuse the entry — jit re-traces on the new
+        shapes by itself."""
+        params = self.params if params is None else params
+        key = (mode, float(lr), float(weight_decay), id(loss_fn),
+               jax.tree.structure(params))
+        hit = self._step_cache.get(key)
+        if hit is None:
+            mask = lightweight.trainable_mask(params, mode=mode)
+            opt = optimizers.adamw(lr, weight_decay=weight_decay, mask=mask)
+            step = jax.jit(make_train_step(self.model, opt, loss_fn=loss_fn))
+            hit = self._step_cache[key] = (mask, opt, step)
+        return hit
+
+    def _default_batch_fn(self, seq_len: int, batch_size: int,
+                          seed: int) -> Callable:
+        if self.task == "cls":
+            ds = SyntheticCLS(self.cfg.vocab_size, seq_len, batch_size,
+                              num_classes=self.cfg.num_classes, seed=seed)
+            return ds.batch
+        shape = ShapeConfig("pipeline", "train", seq_len, batch_size)
+        return make_batch_fn(self.cfg, shape, seed=seed)
+
+    # ---- finetune ----
+
+    def finetune(self, *, mode: str = "lfa", steps: int = 60,
+                 lr: float | Callable = 2e-3, warmup: int = 0,
+                 weight_decay: float = 0.0, seq_len: int = 32,
+                 batch_size: int = 16, seed: int = 0, mask=None,
+                 optimizer=None, loss_fn: Callable | None = None,
+                 batch_fn: Callable | None = None, ckpt_dir: str | None = None,
+                 ckpt_every: int = 100, log_every: int = 50,
+                 donate: bool = False, verbose: bool = False) -> dict:
+        """Lightweight fine-tuning (paper §4.1): build the trainability mask
+        (``mode="lfa"`` freezes the central tensors), a masked optimizer
+        (frozen leaves allocate no state and receive no updates), and run the
+        jitted train loop.  ``ckpt_dir`` enables checkpoint/resume (written
+        every ``ckpt_every`` steps).  ``donate=True`` donates the train-state
+        buffers to each step (halves peak params+optimizer memory at scale;
+        any pre-finetune reference to ``session.params`` becomes invalid).
+        Returns a stage report; the session's params advance in place."""
+        t0 = time.perf_counter()
+        loss_fn = loss_fn or self._default_loss_fn()
+        batch_fn = batch_fn or self._default_batch_fn(seq_len, batch_size,
+                                                      seed)
+        if mask is None and optimizer is None and not callable(lr) \
+                and not warmup and not donate:
+            mask, optimizer, step_fn = self._cached_train_step(
+                mode, lr, weight_decay, loss_fn)
+        else:
+            if mask is None and optimizer is None:
+                mask = lightweight.trainable_mask(self.params, mode=mode)
+            # a caller-supplied optimizer owns its own masking — do NOT
+            # fabricate a mode-derived mask for it, the trainable counts
+            # below would claim freezes that never happened
+            if optimizer is None:
+                lr_fn = lr if (callable(lr) or not warmup) else \
+                    schedule.cosine_warmup(lr, warmup=warmup, total=steps)
+                optimizer = optimizers.adamw(lr_fn,
+                                             weight_decay=weight_decay,
+                                             mask=mask)
+            step_fn = jax.jit(make_train_step(self.model, optimizer,
+                                              loss_fn=loss_fn),
+                              donate_argnums=(0,) if donate else ())
+        state = TrainState(self.params, optimizer.init(self.params))
+        loop = LoopConfig(steps=steps, ckpt_dir=ckpt_dir,
+                          ckpt_every=ckpt_every,
+                          log_every=max(1, min(log_every, steps)))
+        log = print if verbose else (lambda *a, **k: None)
+        try:
+            state, history = run_training(step_fn, state, batch_fn, loop,
+                                          to_device=_to_device, log_fn=log)
+        except BaseException as e:
+            if donate:
+                # the first donated step already invalidated the buffers
+                # self.params points at — fail the session loudly instead of
+                # leaving it to die later with "Array has been deleted"
+                self.params = None
+                if hasattr(e, "add_note"):  # py3.11+
+                    e.add_note(
+                        "Session.finetune(donate=True) failed mid-run: the "
+                        "session's params were donated and are gone; rebuild "
+                        "the session (or resume from ckpt_dir)")
+            raise
+        self.params = state.params
+        self.mask = mask
+        self._bump()
+        info = {"mode": mode, "steps": steps,
+                "total": lightweight.count_params(self.params),
+                "loss_first": history[0]["loss"] if history else None,
+                "loss_final": history[-1]["loss"] if history else None}
+        if mask is not None:
+            tr, tot = lightweight.count_trainable(self.params, mask)
+            info.update(trainable=tr,
+                        reduction=1.0 - tr / max(tot, 1))
+        self._record("finetune", t0, info)
+        return dict(info, history=history)
+
+    # ---- evaluation ----
+
+    def evaluate(self, params=None, *, num_batches: int = 8,
+                 seq_len: int = 32, batch_size: int = 16, seed: int = 0,
+                 loss_fn: Callable | None = None,
+                 batch_fn: Callable | None = None) -> float:
+        """Held-out metric, higher = better: mean accuracy for
+        classification configs, negative mean loss for LMs.  Evaluates the
+        session params unless an explicit tree is passed (``squeeze`` passes
+        freshly densified snapshots through here)."""
+        params = self.params if params is None else params
+        loss_fn = loss_fn or self._default_loss_fn()
+        batch_fn = batch_fn or self._default_batch_fn(seq_len, batch_size,
+                                                      seed)
+        key = ("eval", id(loss_fn))
+        eval_fn = self._step_cache.get(key)
+        if eval_fn is None:
+            eval_fn = self._step_cache[key] = jax.jit(
+                lambda p, b: loss_fn(p, b)[1])
+        vals = []
+        for i in range(1000, 1000 + num_batches):
+            m = eval_fn(params, _to_device(batch_fn(i)))
+            vals.append(float(m["acc"]) if "acc" in m else -float(m["loss"]))
+        return float(np.mean(vals))
+
+    # ---- squeeze ----
+
+    def squeeze(self, *, delta: float = 0.05, max_iters: int = 8,
+                step: int = 1, min_bond: int = 1, finetune_steps: int = 12,
+                lr: float = 1e-3, mode: str = "lfa", seq_len: int = 32,
+                batch_size: int = 16, seed: int = 0,
+                eval_fn: Callable | None = None,
+                loss_fn: Callable | None = None,
+                batch_fn: Callable | None = None, weight_cache: bool = True,
+                verbose: bool = False) -> list:
+        """Dimension squeezing (paper Algorithm 2): repeatedly truncate the
+        least-error bond, re-tune the auxiliary tensors, stop when the metric
+        gap exceeds ``delta``.  Every evaluation runs on a freshly contracted
+        weight snapshot (``weight_cache=True``), and any serving snapshot
+        taken before this call is invalidated — a post-squeeze ``serve``
+        always re-densifies from the squeezed cores."""
+        t0 = time.perf_counter()
+        loss_fn = loss_fn or self._default_loss_fn()
+        batch_fn = batch_fn or self._default_batch_fn(seq_len, batch_size,
+                                                      seed)
+        if eval_fn is None:
+            eval_fn = lambda p: self.evaluate(
+                p, loss_fn=loss_fn, batch_fn=batch_fn)
+        rho0 = squeeze_mod.model_compression_ratio(self.params)
+
+        def finetune_fn(p):
+            return self._tune_params(p, steps=finetune_steps, lr=lr,
+                                     mode=mode, loss_fn=loss_fn,
+                                     batch_fn=batch_fn)
+
+        self.params, history = squeeze_mod.run_dimension_squeezing(
+            self.params, finetune_fn, eval_fn, delta=delta,
+            max_iters=max_iters, step=step, min_bond=min_bond,
+            verbose=verbose,
+            weight_cache=self.engine.cache_weights if weight_cache else None)
+        self._bump()
+        self.squeeze_history.extend(history)
+        self._record("squeeze", t0, {
+            "events": len(history), "delta": delta,
+            "rho_before": rho0,
+            "rho_after": squeeze_mod.model_compression_ratio(self.params)})
+        return history
+
+    def _tune_params(self, params, *, steps: int, lr: float, mode: str,
+                     loss_fn: Callable, batch_fn: Callable,
+                     batch_offset: int = 2000):
+        """Short LFA re-tune on an explicit tree (the inner loop of
+        Algorithm 2) — no stage record, no version bump (the enclosing
+        ``squeeze`` owns both).  The jitted step is shared across squeeze
+        iterations (bond truncation changes shapes, which jit re-traces on
+        its own; the Python-level trace machinery is built once)."""
+        mask, opt, step_fn = self._cached_train_step(mode, lr, 0.0, loss_fn,
+                                                     params=params)
+        state = TrainState(params, opt.init(params))
+        for i in range(steps):
+            state, _ = step_fn(state, _to_device(batch_fn(batch_offset + i)))
+        return state.params
+
+    # ---- serve ----
+
+    def serve(self, batch_size: int, max_len: int, *,
+              weight_cache: bool = True) -> ServeHandle:
+        """Serving handle for the CURRENT weights.  The one-time
+        ``init_serve`` (KV cache + cached-W contraction) runs only when no
+        valid handle exists for this (batch, max_len, weight_cache) shape:
+        handles built before any ``finetune``/``squeeze`` were dropped at
+        the version bump and are rebuilt, never reused; handles for other
+        shapes at the current version stay cached."""
+        t0 = time.perf_counter()
+        key = (batch_size, max_len, weight_cache)
+        h = self._serve.get(key)
+        if h is not None:
+            return h.reset()
+        handle = ServeHandle(self.model, self.params, batch_size, max_len,
+                             weight_cache=weight_cache,
+                             version=self._version)
+        self._serve[key] = handle
+        self._record("serve", t0, {"batch": batch_size, "max_len": max_len,
+                                   "weight_cache": weight_cache,
+                                   "init_seconds": handle.init_seconds})
+        return handle
+
+    # ---- report ----
+
+    def report(self) -> dict:
+        """Lifecycle summary: where the session is, what each stage cost,
+        and the paper's headline numbers (compression ratio rho, trainable-
+        parameter reduction, conversion error)."""
+        out: dict[str, Any] = {
+            "arch": self.cfg.name,
+            "task": self.task,
+            "stage": self.stage,
+            "weights_version": self._version,
+            "compression_ratio":
+                squeeze_mod.model_compression_ratio(self.params),
+            "params_total": lightweight.count_params(self.params),
+            "stages": [{"stage": r.stage,
+                        "seconds": round(r.seconds, 4), **r.info}
+                       for r in self._records],
+        }
+        if self.mask is not None:
+            tr, tot = lightweight.count_trainable(self.params, self.mask)
+            out["trainable"] = tr
+            out["trainable_reduction"] = 1.0 - tr / max(tot, 1)
+        if self.conversion_report:
+            errs = list(self.conversion_report.values())
+            out["conversion_max_rel_err"] = max(errs)
+            out["conversion_mean_rel_err"] = float(np.mean(errs))
+        if self.squeeze_history:
+            out["squeeze_events"] = len(self.squeeze_history)
+        return out

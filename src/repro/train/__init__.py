@@ -1,0 +1,1 @@
+"""Jitted train/eval/serve step builders and the fault-tolerant loop."""
