@@ -86,8 +86,16 @@ def run() -> list[str]:
     result["decode_speedup"] = round(
         result["decode_tok_s_cached"] / result["decode_tok_s_uncached"], 3)
     rows.append(f"engine,speedup,{result['decode_speedup']:.3f}x")
+    # merge into the existing file (pipeline_overhead.py appends its own
+    # section there — a refresh of this suite must not erase it)
+    try:
+        with open(_JSON_PATH) as f:
+            existing = json.load(f)
+    except (OSError, ValueError):
+        existing = {}
+    existing.update(result)
     with open(_JSON_PATH, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(existing, f, indent=2)
         f.write("\n")
     return rows
 

@@ -11,7 +11,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (engine_modes, fig2_lowrank, roofline,
+    from benchmarks import (engine_modes, fig2_lowrank, kernel_vjp, roofline,
                             table1_variation, table2_complexity,
                             table3_glue_analog, table4_variants,
                             table5_last_layers)
@@ -24,6 +24,7 @@ def main() -> None:
         "fig2": fig2_lowrank.run,
         "roofline": roofline.run,
         "engine": engine_modes.run,
+        "kernel": kernel_vjp.run,
     }
     want = sys.argv[1:] or list(suites)
     for name in want:

@@ -40,7 +40,7 @@ __all__ = [
     "MPOConfig", "DENSE",
     "MPOEngine", "ExecutionPlan", "engine_for", "choose_mode",
     "ModelConfig", "ShapeConfig",
-    "configs", "optim", "pipeline",
+    "configs", "optim", "pipeline", "autotune",
 ]
 
 _EXPORTS = {
@@ -60,6 +60,8 @@ _EXPORTS = {
     "configs": "repro.configs",
     "optim": "repro.optim",
     "pipeline": "repro.pipeline",
+    # measured kernel autotuning (cache path / reset / stats)
+    "autotune": "repro.kernels.autotune",
 }
 
 

@@ -12,9 +12,11 @@ depends on where in the model lifecycle the matmul happens:
   reconstruct   contract cores -> dense W, MXU matmul      compute-bound shapes,
                 (``mpo.matmul_reconstruct``; custom VJP    training (factorized
                 keeps the backward in core-space)          VJP shards badly)
-  kernel        fused on-chip rebuild + matmul Pallas      forward-only phases on
-                kernel — W never round-trips HBM           real TPUs (interpret
-                (``kernels.ops.mpo_linear``)               mode is never fast)
+  kernel        fused on-chip rebuild + matmul Pallas      dense-favored shapes on
+                kernel — W never round-trips HBM, and      real TPUs, ALL phases
+                the custom VJP accumulates gradients       (interpret mode is
+                directly in core space                     never fast)
+                (``kernels.ops.mpo_linear``)
   cached        dense W contracted ONCE at serving init    decode: the rebuild is
                 and reused for every decode step           amortized to zero
 
@@ -24,16 +26,22 @@ loop re-contracted every layer's cores into W on every generated token.  The
 engine centralizes the decision:
 
 * ``ExecutionPlan`` — one immutable plan per (core shapes, token count,
-  phase, interpret).  Plans are memoized process-wide (``_plan`` lru_cache):
-  planning is pure Python on static shapes and happens once per distinct
-  call signature, not per call.
-* **Phases** — ``train`` (fwd+bwd; kernel excluded: no VJP, and
-  ``matmul_reconstruct``'s core-space backward is the tuned path),
-  ``prefill`` (forward-only, many tokens: kernel becomes a real auto
-  candidate on MXU-aligned shapes when not interpreting), ``decode``
-  (forward-only, one token per step: ``cached`` vs ``factorized`` by
-  per-token FLOPs — the one-time rebuild is amortized across the whole
-  generation, so only the steady-state cost matters).
+  phase, interpret, dtype).  Plans are memoized process-wide (``_plan``
+  lru_cache): planning is pure Python on static shapes and happens once per
+  distinct call signature, not per call.
+* **Phases** — ``train`` (fwd+bwd: ``matmul_reconstruct``'s core-space
+  backward vs the factorized chain vs — now that it carries a custom VJP —
+  the fused kernel), ``prefill`` (forward-only, many tokens: same
+  candidates), ``decode`` (forward-only, one token per step: ``cached`` vs
+  ``factorized`` by per-token FLOPs — the one-time rebuild is amortized
+  across the whole generation, so only the steady-state cost matters).
+* **Measured autotuning** — when the kernel would run compiled on real
+  hardware (or ``REPRO_AUTOTUNE_MEASURE=1``), the train/prefill decision and
+  the kernel tile height ``block_m`` come from ``kernels.autotune``: a small
+  candidate grid is TIMED once per (shapes, tokens, phase, dtype) key and
+  the verdict persists to ``~/.cache/repro/autotune.json``
+  (``REPRO_AUTOTUNE_CACHE``), so later processes plan with zero timing runs.
+  Interpret mode keeps the analytic FLOPs heuristic.
 * **Serving weight cache** — ``MPOEngine.cache_weights(params)`` walks a
   params tree once at serving init (alongside KV-cache allocation) and
   replaces every factorized matrix whose decode plan is ``cached`` with its
@@ -68,13 +76,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mpo
+from repro.kernels import autotune
+# single source of truth for the kernel tile default + alignment/eligibility
+# rules lives with the kernel itself (kernels.mpo_linear) — re-exported here
+# because planning call sites historically import them from the engine
+from repro.kernels.mpo_linear import DEFAULT_BLOCK_M, kernel_eligible
 
 PHASES = ("train", "prefill", "decode")
 MODES = ("factorized", "reconstruct", "kernel", "cached")
-
-# default tile height for the Pallas kernel path (multiple of the f32
-# sublane count 8; the kernel itself validates alignment)
-DEFAULT_BLOCK_M = 256
 
 
 # --------------------------------------------------------------------------
@@ -112,20 +121,6 @@ def flops_dense_per_token(shapes: Sequence[tuple]) -> int:
     return 2 * ins * outs
 
 
-def _kernel_eligible(shapes: Sequence[tuple], block_m: int) -> bool:
-    """Can the fused Pallas kernel run these shapes efficiently?
-
-    The kernel rebuilds one (I/i1, J/j1) W-tile per program; those tile dims
-    must respect the TPU f32 tiling floor (8 sublanes x 128 lanes) or Mosaic
-    pads every tile and the on-chip rebuild loses to plain reconstruct.
-    """
-    ins = [s[1] for s in shapes]
-    outs = [s[2] for s in shapes]
-    i_tile = math.prod(ins[1:])
-    j_tile = math.prod(outs[1:])
-    return (block_m % 8 == 0 and i_tile % 8 == 0 and j_tile % 128 == 0)
-
-
 # --------------------------------------------------------------------------
 # planning
 # --------------------------------------------------------------------------
@@ -142,20 +137,30 @@ class ExecutionPlan:
     flops_factorized: int          # per-token chain cost
     flops_dense: int               # per-token dense matmul cost
     flops_rebuild: int             # one-time cores -> W cost
-    block_m: int = DEFAULT_BLOCK_M
+    block_m: int = DEFAULT_BLOCK_M  # kernel tile height (measured when tuned)
     interpret: bool = True         # kernel interpreter flag (False on TPU)
+    dtype: str = "float32"         # activation dtype the plan was sized for
+    tuned: bool = False            # block_m/mode came from a measurement
     reason: str = ""               # human-readable why (for tests/debug)
 
 
-def choose_mode(cfg, shapes: Sequence[tuple], tokens: int, phase: str,
-                *, interpret: bool = True) -> tuple[str, str]:
-    """(mode, reason) for one matrix execution.  ``cfg`` is an
-    ``layers.MPOConfig``; a non-"auto" ``cfg.mode`` always wins."""
+def _decide(cfg, shapes: tuple, tokens: int, phase: str, interpret: bool,
+            dtype: str) -> tuple[str, int, bool, str]:
+    """(mode, block_m, tuned, reason) — the full planning decision.
+
+    ``train`` and ``prefill`` first consult the measured autotuner
+    (``kernels.autotune``) when measurement is meaningful (compiled kernels
+    on real hardware, or forced via ``REPRO_AUTOTUNE_MEASURE=1``); interpret
+    mode falls back to the analytic FLOPs heuristic.  ``decode``'s
+    cached-vs-factorized choice stays analytic on purpose: it is a memory
+    *policy* (never resurrect a heavily compressed table as dense HBM), not
+    a latency race.
+    """
     if phase not in PHASES:
         raise ValueError(f"unknown phase {phase!r} (expected one of {PHASES})")
     if cfg.mode != "auto":
-        return cfg.mode, f"forced by cfg.mode={cfg.mode!r}"
-    shapes = tuple(tuple(s) for s in shapes)
+        return cfg.mode, DEFAULT_BLOCK_M, False, \
+            f"forced by cfg.mode={cfg.mode!r}"
     fact_tok = flops_factorized_per_token(shapes)
     dense_tok = flops_dense_per_token(shapes)
     rebuild = flops_reconstruct(shapes)
@@ -163,34 +168,76 @@ def choose_mode(cfg, shapes: Sequence[tuple], tokens: int, phase: str,
         # the one-time rebuild happens at serving init (cache_weights) and is
         # amortized over the whole generation -> steady-state FLOPs decide
         if dense_tok < fact_tok:
-            return "cached", (f"dense {dense_tok} < factorized {fact_tok} "
-                              "FLOPs/token; rebuild amortized at cache init")
-        return "factorized", (f"factorized {fact_tok} <= dense {dense_tok} "
-                              "FLOPs/token; caching W would also cost I*J HBM")
+            return "cached", DEFAULT_BLOCK_M, False, (
+                f"dense {dense_tok} < factorized {fact_tok} "
+                "FLOPs/token; rebuild amortized at cache init")
+        return "factorized", DEFAULT_BLOCK_M, False, (
+            f"factorized {fact_tok} <= dense {dense_tok} "
+            "FLOPs/token; caching W would also cost I*J HBM")
+    if autotune.should_measure(interpret):
+        try:
+            res = autotune.get_tuner().get(shapes, tokens, phase, dtype,
+                                           interpret)
+        except Exception:  # tuning must never take planning down
+            res = None
+        if res is not None:
+            return res.mode, res.block_m, True, (
+                f"autotuned ({res.source}): {res.mode}@{res.block_m} "
+                f"fastest of {len(res.timings)} candidates")
     cost_fact = tokens * fact_tok
     cost_recon = rebuild + tokens * dense_tok
     if cost_fact < cost_recon:
-        return "factorized", (f"chain {cost_fact} < rebuild+dense "
-                              f"{cost_recon} FLOPs at {tokens} tokens")
-    if phase == "prefill" and not interpret \
-            and _kernel_eligible(shapes, DEFAULT_BLOCK_M):
-        return "kernel", ("dense-favored forward-only phase on TPU with "
-                          "MXU-aligned tiles: fuse rebuild on-chip")
-    return "reconstruct", (f"rebuild+dense {cost_recon} <= chain {cost_fact} "
-                           f"FLOPs at {tokens} tokens")
+        return "factorized", DEFAULT_BLOCK_M, False, (
+            f"chain {cost_fact} < rebuild+dense "
+            f"{cost_recon} FLOPs at {tokens} tokens")
+    # differentiable kernel: a candidate for fwd+bwd (train) and forward-only
+    # (prefill) alike — the backward accumulates core-space gradients
+    # on-chip, so no dense dW traffic disqualifies it.  train's dL/dx pass
+    # runs the kernel over i/j-SWAPPED cores, so both tile orientations must
+    # clear the alignment floor.
+    eligible = kernel_eligible(shapes, DEFAULT_BLOCK_M)
+    if phase == "train":
+        transposed = tuple((d0, j, i, d1) for (d0, i, j, d1) in shapes)
+        eligible = eligible and kernel_eligible(transposed, DEFAULT_BLOCK_M)
+    if not interpret and eligible:
+        what = "fwd+bwd" if phase == "train" else "forward-only"
+        return "kernel", DEFAULT_BLOCK_M, False, (
+            f"dense-favored {what} phase on TPU with MXU-aligned tiles: "
+            "fuse rebuild on-chip (analytic gate; no measurement available)")
+    return "reconstruct", DEFAULT_BLOCK_M, False, (
+        f"rebuild+dense {cost_recon} <= chain {cost_fact} "
+        f"FLOPs at {tokens} tokens")
+
+
+def choose_mode(cfg, shapes: Sequence[tuple], tokens: int, phase: str,
+                *, interpret: bool = True,
+                dtype: str = "float32") -> tuple[str, str]:
+    """(mode, reason) for one matrix execution.  ``cfg`` is an
+    ``layers.MPOConfig``; a non-"auto" ``cfg.mode`` always wins."""
+    shapes = tuple(tuple(s) for s in shapes)
+    mode, _, _, reason = _decide(cfg, shapes, tokens, phase, interpret,
+                                 jnp.dtype(dtype).name)
+    return mode, reason
 
 
 @functools.lru_cache(maxsize=None)
-def _plan(cfg, shapes: tuple, tokens: int, phase: str,
-          interpret: bool) -> ExecutionPlan:
-    mode, reason = choose_mode(cfg, shapes, tokens, phase,
-                               interpret=interpret)
+def _plan(cfg, shapes: tuple, tokens: int, phase: str, interpret: bool,
+          dtype: str) -> ExecutionPlan:
+    mode, block_m, tuned, reason = _decide(cfg, shapes, tokens, phase,
+                                           interpret, dtype)
     return ExecutionPlan(
         mode=mode, phase=phase, shapes=shapes, tokens=tokens,
         flops_factorized=flops_factorized_per_token(shapes),
         flops_dense=flops_dense_per_token(shapes),
         flops_rebuild=flops_reconstruct(shapes),
-        block_m=DEFAULT_BLOCK_M, interpret=interpret, reason=reason)
+        block_m=block_m, interpret=interpret, dtype=dtype, tuned=tuned,
+        reason=reason)
+
+
+def clear_plan_cache() -> None:
+    """Drop every memoized ``ExecutionPlan`` (tests; also needed after
+    ``autotune.reset_tuner`` so new measurements are actually consulted)."""
+    _plan.cache_clear()
 
 
 # --------------------------------------------------------------------------
@@ -231,11 +278,11 @@ class MPOEngine:
 
     # ---- planning ----
 
-    def plan(self, shapes: Sequence[tuple], tokens: int,
-             phase: str) -> ExecutionPlan:
+    def plan(self, shapes: Sequence[tuple], tokens: int, phase: str,
+             dtype="float32") -> ExecutionPlan:
         """The (memoized) plan for one matrix at one workload point."""
         return _plan(self.cfg, tuple(tuple(s) for s in shapes), int(tokens),
-                     phase, self.interpret)
+                     phase, self.interpret, jnp.dtype(dtype).name)
 
     # ---- core preparation: the ONE place freeze + casting happen ----
 
@@ -268,13 +315,13 @@ class MPOEngine:
             cores = mpo.transpose_cores(cores)
         tokens = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
         shapes = [c.shape for c in cores]
-        plan = self.plan(shapes, tokens, phase)
+        plan = self.plan(shapes, tokens, phase, x.dtype)
         if plan.mode == "cached" and self.cfg.mode == "auto":
             # "cached" assumes the rebuild was amortized at cache init, but
             # the caller passed raw (un-densified) cores — the rebuild would
             # run on EVERY call.  Re-decide as a forward-only one-shot
             # execution (the prefill rule prices the per-call rebuild in).
-            plan = self.plan(shapes, tokens, "prefill")
+            plan = self.plan(shapes, tokens, "prefill", x.dtype)
         if plan.mode == "kernel":
             from repro.kernels import ops  # lazy: avoid import cycle
             return ops.mpo_linear(cores, x, block_m=plan.block_m,

@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots.
+
+- ``mpo_linear`` — differentiable fused MPO-reconstruct + matmul (custom
+  VJP: core-space gradient accumulation, no dense dW);
+- ``ssd_scan``  — chunked SSD recurrence for the SSM families;
+- ``autotune``  — measured (mode, block_m) selection with an on-disk cache;
+- ``ops``       — jit'd public wrappers (the engine's entry point);
+- ``ref``       — pure-jnp oracles for correctness tests.
+"""

@@ -1,4 +1,4 @@
-"""Fused MPO-reconstruct + matmul Pallas TPU kernel.
+"""Fused MPO-reconstruct + matmul Pallas TPU kernel — differentiable.
 
 ``reconstruct`` mode round-trips the dense W through HBM (and, sharded, an
 all-gather) every step.  This kernel tiles the grid over the *leading MPO
@@ -9,8 +9,26 @@ W never exists in HBM — per-step HBM traffic is activations + *compressed*
 cores only, which is the TPU-native realization of the paper's compression
 claim (DESIGN §3.2).
 
-Grid: ``(M/bm, j1, i1)`` — i1 innermost = sequential reduction over the
-output tile (standard Pallas accumulation pattern).
+Forward grid: ``(M/bm, j1, i1)`` — i1 innermost = sequential reduction over
+the output tile (standard Pallas accumulation pattern).
+
+Backward (``jax.custom_vjp``) stays fused and core-space:
+
+* ``dL/dx = dy @ W^T`` runs the SAME forward kernel over the transposed
+  cores (swap every core's i/j legs): the cotangent is contracted against
+  tile-reconstructed W^T tiles, never a dense W^T.
+* ``dL/dcores`` runs ``_bwd_cores_kernel`` on grid ``(i1, j1, M/bm)``: each
+  program forms one ``(I/i1, J/j1)`` tile of ``dW = x^T dy`` in VMEM and
+  immediately pulls it back through the tile-reconstruction chain
+  (``jax.vjp`` of ``_tile_w`` — a handful of core-sized matmuls), so the
+  gradient is *accumulated directly in core space*.  The dense dW — whose
+  per-layer all-reduce is exactly what lightweight fine-tuning exists to
+  avoid — never materializes in HBM (or anywhere: only one tile of it ever
+  exists, on-chip).
+
+This is what makes ``kernel`` a legal ``train``-phase mode: the engine's
+planner (``core.engine`` + ``kernels.autotune``) may now pick it for
+fwd+bwd workloads, not just forward-only prefill.
 """
 
 from __future__ import annotations
@@ -23,34 +41,82 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Single source of truth for the kernel tile height (imported by
+# ``core.engine`` and ``kernels.autotune`` — do not re-declare):
+# BLOCK_M_ALIGN is the f32 sublane count; unaligned tile heights make
+# Mosaic pad every x/out tile.  DEFAULT_BLOCK_M is the analytic fallback
+# used when no measured autotune result exists for a shape.
+BLOCK_M_ALIGN = 8
+DEFAULT_BLOCK_M = 256
 
-def _tile_reconstruct(core_refs, n: int):
-    """Rebuild the (I1, J1) W-tile for this program's (i1, j1) block.
+
+def validate_block_m(block_m: int) -> None:
+    """The one place the ``block_m % 8`` alignment rule is written."""
+    if block_m <= 0 or block_m % BLOCK_M_ALIGN:
+        raise ValueError(f"block_m must be a positive multiple of "
+                         f"{BLOCK_M_ALIGN}, got {block_m}")
+
+
+def kernel_eligible(shapes: Sequence[tuple], block_m: int) -> bool:
+    """Can the fused Pallas kernel run these core shapes efficiently?
+
+    The kernel rebuilds one (I/i1, J/j1) W-tile per program; those tile dims
+    must respect the TPU f32 tiling floor (8 sublanes x 128 lanes) or Mosaic
+    pads every tile and the on-chip rebuild loses to plain reconstruct.
+    Used as the *candidate filter* by the autotuner and as the analytic gate
+    when no measurement is available.
+    """
+    ins = [s[1] for s in shapes]
+    outs = [s[2] for s in shapes]
+    i_tile = math.prod(ins[1:])
+    j_tile = math.prod(outs[1:])
+    return (block_m % BLOCK_M_ALIGN == 0
+            and i_tile % BLOCK_M_ALIGN == 0 and j_tile % 128 == 0)
+
+
+def _effective_block_m(block_m: int, m: int) -> int:
+    """Tile height actually used: aligned, never exceeding ``block_m`` or
+    (the 8-aligned ceiling of) the token count."""
+    return min(block_m, BLOCK_M_ALIGN * ((m + BLOCK_M_ALIGN - 1)
+                                         // BLOCK_M_ALIGN))
+
+
+def _tile_w(fiber: jax.Array, rest: list) -> jax.Array:
+    """(I/i1, J/j1) W-tile from core 0's (i1, j1) bond fiber + the remaining
+    cores.  Pure function of VALUES (not refs): the forward kernel calls it
+    on loaded blocks, and the cores-backward kernel pulls the on-chip dW
+    tile back through it with ``jax.vjp``.
+    """
+    ins = [c.shape[1] for c in rest]
+    outs = [c.shape[2] for c in rest]
+    acc = fiber[None, :]                                   # (1, d1)
+    for c in rest:
+        d0 = c.shape[0]
+        acc = acc.reshape(-1, d0) @ c.reshape(d0, -1)
+        acc = acc.reshape(-1, c.shape[-1])
+    # acc rows are (i2,j2,...,in,jn) interleaved; -> (I/i1, J/j1)
+    nr = len(rest)
+    t = acc.reshape([d for k in range(nr) for d in (ins[k], outs[k])])
+    perm = [2 * k for k in range(nr)] + [2 * k + 1 for k in range(nr)]
+    return t.transpose(perm).reshape(math.prod(ins), math.prod(outs))
+
+
+def _load_tile_operands(core_refs, n: int):
+    """(fiber, rest) f32 values for ``_tile_w`` from this program's blocks.
 
     core_refs[0] is blocked to (1,1,1,d1) — the (i1,j1) fiber of core 0;
     the remaining cores are loaded whole (they are small by construction).
     """
-    ins = [r.shape[1] for r in core_refs]
-    outs = [r.shape[2] for r in core_refs]
-    acc = core_refs[0][0, 0, 0, :][None, :].astype(jnp.float32)  # (1, d1)
-    for k in range(1, n):
-        c = core_refs[k][...].astype(jnp.float32)
-        d0 = c.shape[0]
-        acc = acc.reshape(-1, d0) @ c.reshape(d0, -1)
-        acc = acc.reshape(-1, c.shape[-1])
-    # acc rows are (i2,j2,...,in,jn) interleaved; -> (I1, J1)
-    t = acc.reshape([d for k in range(1, n) for d in (ins[k], outs[k])])
-    perm = ([2 * k for k in range(n - 1)]
-            + [2 * k + 1 for k in range(n - 1)])
-    i1 = math.prod(ins[1:])
-    j1 = math.prod(outs[1:])
-    return t.transpose(perm).reshape(i1, j1)
+    fiber = core_refs[0][0, 0, 0, :].astype(jnp.float32)
+    rest = [core_refs[k][...].astype(jnp.float32) for k in range(1, n)]
+    return fiber, rest
 
 
-def _kernel(*refs, n: int):
+def _fwd_kernel(*refs, n: int):
     core_refs = refs[:n]
     x_ref, o_ref = refs[n], refs[n + 1]
-    w_tile = _tile_reconstruct(core_refs, n)               # (I1, J1) f32
+    fiber, rest = _load_tile_operands(core_refs, n)
+    w_tile = _tile_w(fiber, rest)                          # (I1, J1) f32
     x_tile = x_ref[...].astype(jnp.float32)                # (bm, I1)
     part = x_tile @ w_tile                                 # (bm, J1)
     i = pl.program_id(2)
@@ -64,23 +130,10 @@ def _kernel(*refs, n: int):
         o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
-               block_m: int = 256, interpret: bool) -> jax.Array:
-    """``y[..., J] = x[..., I] @ W(cores)`` without materializing W in HBM.
-
-    ``interpret`` is REQUIRED: the caller (normally the execution engine via
-    ``kernels.ops``) decides whether the kernel body runs compiled on TPU
-    (``False``) or interpreted in Python on CPU (``True``, correctness-only).
-
-    ``block_m`` must be a positive multiple of 8 (the f32 sublane count —
-    unaligned tile heights make Mosaic pad every x/out tile).  Token counts
-    smaller than ``block_m`` shrink the tile to the next multiple of 8
-    instead of silently adopting an unaligned size.
-    """
-    if block_m <= 0 or block_m % 8:
-        raise ValueError(f"block_m must be a positive multiple of 8, "
-                         f"got {block_m}")
+def _fwd_call(cores: Sequence[jax.Array], x: jax.Array,
+              block_m: int, interpret: bool) -> jax.Array:
+    """Raw fused forward: ``y[..., J] = x[..., I] @ W(cores)``, W in VMEM
+    tiles only."""
     cores = list(cores)
     n = len(cores)
     ins = [c.shape[1] for c in cores]
@@ -91,7 +144,7 @@ def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
     m = math.prod(lead) if lead else 1
     xm = x.reshape(m, i_dim)
 
-    bm = min(block_m, 8 * ((m + 7) // 8))  # aligned, never exceeds block_m
+    bm = _effective_block_m(block_m, m)
     pad_m = (-m) % bm
     if pad_m:
         xm = jnp.pad(xm, ((0, pad_m), (0, 0)))
@@ -108,7 +161,7 @@ def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
     in_specs.append(pl.BlockSpec((bm, i1_blk), lambda mi, jj, ii: (mi, ii)))
     out_spec = pl.BlockSpec((bm, j1_blk), lambda mi, jj, ii: (mi, jj))
 
-    kernel = functools.partial(_kernel, n=n)
+    kernel = functools.partial(_fwd_kernel, n=n)
     y = pl.pallas_call(
         kernel,
         grid=(mt, j1, i1),
@@ -120,3 +173,145 @@ def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
     if pad_m:
         y = y[:m]
     return y.reshape(*lead, j_dim)
+
+
+# --------------------------------------------------------------------------
+# backward kernels
+# --------------------------------------------------------------------------
+
+
+def _bwd_cores_kernel(*refs, n: int):
+    """One (i1, j1) tile of ``dW = x^T dy``, pulled back into core space.
+
+    The dW tile exists only in VMEM for the duration of this program; the
+    pullback through ``_tile_w`` (core-chain VJP: a few core-sized matmuls)
+    turns it into per-core gradient contributions which are accumulated
+    across the grid directly into core-shaped outputs.  Grid is
+    ``(i1, j1, M/bm)`` with the token axis innermost: core 0's (i1, j1)
+    gradient block is revisited consecutively over token blocks, and the
+    whole-core outputs (cores 1..n-1) are revisited by every program.
+    """
+    core_refs = refs[:n]
+    x_ref, dy_ref = refs[n], refs[n + 1]
+    dcore_refs = refs[n + 2:]
+    fiber, rest = _load_tile_operands(core_refs, n)
+    x_tile = x_ref[...].astype(jnp.float32)                # (bm, I1)
+    dy_tile = dy_ref[...].astype(jnp.float32)              # (bm, J1)
+    dw_tile = x_tile.T @ dy_tile                           # (I1, J1), VMEM-only
+    _, pullback = jax.vjp(_tile_w, fiber, rest)
+    dfiber, drest = pullback(dw_tile)
+    mi = pl.program_id(2)
+    first = ((pl.program_id(0) == 0) & (pl.program_id(1) == 0) & (mi == 0))
+
+    def accum(ref, val, init):
+        @pl.when(init)
+        def _init():
+            ref[...] = val.astype(ref.dtype)
+
+        @pl.when(jnp.logical_not(init))
+        def _acc():
+            ref[...] = (ref[...].astype(jnp.float32) + val).astype(ref.dtype)
+
+    accum(dcore_refs[0], dfiber.reshape(1, 1, 1, -1), mi == 0)
+    for k in range(1, n):
+        accum(dcore_refs[k], drest[k - 1], first)
+
+
+def _bwd_cores_call(cores: list, x: jax.Array, dy: jax.Array,
+                    block_m: int, interpret: bool) -> tuple:
+    """Per-core gradients of ``sum(dy * (x @ W(cores)))`` — dense dW is
+    never materialized (one VMEM tile at a time)."""
+    n = len(cores)
+    ins = [c.shape[1] for c in cores]
+    outs = [c.shape[2] for c in cores]
+    i_dim = math.prod(ins)
+    j_dim = math.prod(outs)
+    m = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    xm = x.reshape(m, i_dim)
+    dym = dy.reshape(m, j_dim)
+
+    bm = _effective_block_m(block_m, m)
+    pad_m = (-m) % bm
+    if pad_m:
+        # zero rows contribute nothing to x^T dy
+        xm = jnp.pad(xm, ((0, pad_m), (0, 0)))
+        dym = jnp.pad(dym, ((0, pad_m), (0, 0)))
+    mt = xm.shape[0] // bm
+    i1, j1 = ins[0], outs[0]
+    i1_blk = i_dim // i1
+    j1_blk = j_dim // j1
+
+    in_specs = [pl.BlockSpec((1, 1, 1, cores[0].shape[-1]),
+                             lambda ii, jj, mi: (0, ii, jj, 0))]
+    for c in cores[1:]:
+        in_specs.append(pl.BlockSpec(c.shape, lambda ii, jj, mi: (0,) * 4))
+    in_specs.append(pl.BlockSpec((bm, i1_blk), lambda ii, jj, mi: (mi, ii)))
+    in_specs.append(pl.BlockSpec((bm, j1_blk), lambda ii, jj, mi: (mi, jj)))
+    out_specs = [pl.BlockSpec((1, 1, 1, cores[0].shape[-1]),
+                              lambda ii, jj, mi: (0, ii, jj, 0))]
+    for c in cores[1:]:
+        out_specs.append(pl.BlockSpec(c.shape, lambda ii, jj, mi: (0,) * 4))
+
+    kernel = functools.partial(_bwd_cores_kernel, n=n)
+    dcores = pl.pallas_call(
+        kernel,
+        grid=(i1, j1, mt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct(c.shape, c.dtype) for c in cores],
+        interpret=interpret,
+    )(*cores, xm, dym)
+    return tuple(dcores)
+
+
+# --------------------------------------------------------------------------
+# custom VJP assembly
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _mpo_linear(cores: tuple, x: jax.Array, block_m: int,
+                interpret: bool) -> jax.Array:
+    return _fwd_call(cores, x, block_m, interpret)
+
+
+def _mpo_linear_fwd(cores, x, block_m, interpret):
+    return _fwd_call(cores, x, block_m, interpret), (cores, x)
+
+
+def _mpo_linear_bwd(block_m, interpret, res, dy):
+    cores, x = res
+    # dx = dy @ W^T: the forward kernel over i/j-swapped cores — the
+    # cotangent is contracted against tile-reconstructed W^T, tile by tile.
+    cores_t = tuple(c.transpose(0, 2, 1, 3) for c in cores)
+    dx = _fwd_call(cores_t, dy, block_m, interpret).astype(x.dtype)
+    lead = x.shape[:-1]
+    m = math.prod(lead) if lead else 1
+    dcores = _bwd_cores_call(list(cores), x.reshape(m, -1),
+                             dy.reshape(m, -1), block_m, interpret)
+    return dcores, dx
+
+
+_mpo_linear.defvjp(_mpo_linear_fwd, _mpo_linear_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def mpo_linear(cores: Sequence[jax.Array], x: jax.Array, *,
+               block_m: int = DEFAULT_BLOCK_M, interpret: bool) -> jax.Array:
+    """``y[..., J] = x[..., I] @ W(cores)`` without materializing W in HBM.
+
+    Differentiable: gradients flow to ``cores`` (accumulated in core space
+    by ``_bwd_cores_kernel`` — no dense dW) and to ``x`` (forward kernel on
+    transposed cores).  ``interpret`` is REQUIRED: the caller (normally the
+    execution engine via ``kernels.ops``) decides whether the kernel bodies
+    run compiled on TPU (``False``) or interpreted in Python on CPU
+    (``True``, correctness-only).
+
+    ``block_m`` must be a positive multiple of ``BLOCK_M_ALIGN`` (the f32
+    sublane count — unaligned tile heights make Mosaic pad every x/out
+    tile).  Token counts smaller than ``block_m`` shrink the tile to the
+    next multiple of 8 instead of silently adopting an unaligned size.
+    The fastest value is shape-dependent — ``kernels.autotune`` measures it.
+    """
+    validate_block_m(block_m)
+    return _mpo_linear(tuple(cores), x, block_m, interpret)

@@ -6,6 +6,7 @@ from typing import Sequence
 
 import jax
 
+from repro.kernels.mpo_linear import DEFAULT_BLOCK_M
 from repro.kernels.mpo_linear import mpo_linear as _mpo_linear
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
@@ -16,8 +17,10 @@ INTERPRET = True
 
 
 def mpo_linear(cores: Sequence[jax.Array], x: jax.Array,
-               block_m: int = 256,
+               block_m: int = DEFAULT_BLOCK_M,
                interpret: bool | None = None) -> jax.Array:
+    """Differentiable fused MPO-linear (see ``kernels.mpo_linear``); the
+    engine passes the plan's (possibly autotuned) ``block_m``."""
     interpret = INTERPRET if interpret is None else interpret
     return _mpo_linear(tuple(cores), x, block_m=block_m, interpret=interpret)
 

@@ -3,6 +3,13 @@
 ``make_train_step`` builds the canonical SPMD step: forward (remat-scanned),
 CE loss (optionally sequence-chunked so per-chip logits stay at one chunk —
 critical at 200k+ vocab), backward, (optional EF-compressed) optimizer update.
+
+Every MPO matmul inside the step executes through the engine's
+``train``-phase ``ExecutionPlan`` (the model threads ``phase="train"``).
+Since the fused Pallas kernel carries a custom VJP, a train plan may now
+resolve to ``kernel`` — fwd AND bwd fused, gradients accumulated in core
+space — with the tile height measured by ``kernels.autotune``; the step
+builders below need no changes to pick that up.
 """
 
 from __future__ import annotations

@@ -85,7 +85,7 @@ def test_auto_decode_raw_cores_does_not_rebuild_per_step():
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_f), atol=1e-4)
 
 
-@pytest.mark.parametrize("mode", ["factorized", "reconstruct"])
+@pytest.mark.parametrize("mode", ["factorized", "reconstruct", "kernel"])
 def test_grad_parity_freeze_central(mode):
     """Gradients w.r.t. auxiliary cores agree across differentiable modes
     under freeze_central_grads; the central core's gradient is exactly 0."""
@@ -145,10 +145,15 @@ def test_plan_phase_decisions_pinned():
     ffn = tuple(mpo.MPOSpec.make(1024, 1024, n=5, bond_dim=16).core_shapes())
     vocab = tuple(mpo.MPOSpec.make(32768, 256, n=3, bond_dim=8).core_shapes())
 
-    # train: fwd+bwd -> never kernel (no VJP); FLOPs pick reconstruct here
+    # train on TPU: dense-favored + aligned -> the kernel, now that it has a
+    # fused VJP (core-space gradient accumulation) — the acceptance contract
     assert choose_mode(cfg, ffn, 4096, "train", interpret=False)[0] \
-        == "reconstruct"
+        == "kernel"
     assert choose_mode(cfg, ALIGNED, 4096, "train", interpret=False)[0] \
+        == "kernel"
+    # train in interpret mode: kernel never a perf candidate -> reconstruct
+    # (matmul_reconstruct's core-space backward)
+    assert choose_mode(cfg, ffn, 4096, "train", interpret=True)[0] \
         == "reconstruct"
     # prefill on TPU (interpret=False) with aligned tiles -> fused kernel
     assert choose_mode(cfg, ffn, 4096, "prefill", interpret=False)[0] \
@@ -157,6 +162,14 @@ def test_plan_phase_decisions_pinned():
         == "kernel"
     # interpreter mode is never a perf candidate -> falls back to reconstruct
     assert choose_mode(cfg, ffn, 4096, "prefill", interpret=True)[0] \
+        == "reconstruct"
+    # one-sided alignment (j-tile 128-aligned, i-tile only 8-aligned) is
+    # prefill-only: train's dL/dx pass runs the kernel over TRANSPOSED
+    # cores, whose j-tile would be 16 — below the 128-lane floor
+    oneside = ((1, 2, 4, 32), (32, 4, 4, 32), (32, 4, 32, 1))
+    assert choose_mode(cfg, oneside, 4096, "prefill", interpret=False)[0] \
+        == "kernel"
+    assert choose_mode(cfg, oneside, 4096, "train", interpret=False)[0] \
         == "reconstruct"
     # decode: dense/token beats the chain for ffn-like shapes -> cached
     assert choose_mode(cfg, ffn, 8, "decode", interpret=True)[0] == "cached"
