@@ -12,7 +12,7 @@ import time
 
 def main() -> None:
     from benchmarks import (engine_modes, fig2_lowrank, kernel_vjp, roofline,
-                            table1_variation, table2_complexity,
+                            serve_pool, table1_variation, table2_complexity,
                             table3_glue_analog, table4_variants,
                             table5_last_layers)
     suites = {
@@ -25,6 +25,7 @@ def main() -> None:
         "roofline": roofline.run,
         "engine": engine_modes.run,
         "kernel": kernel_vjp.run,
+        "serve_pool": serve_pool.run,
     }
     want = sys.argv[1:] or list(suites)
     for name in want:

@@ -8,13 +8,15 @@ Stable public surface
 ---------------------
 ``Session``            the stage-based lifecycle API (init/from_dense ->
                        finetune -> squeeze -> serve -> report)
-``ServeHandle``        bound prefill/decode serving handle
+``ServeHandle``        bound prefill/decode serving handle (mesh-aware)
+``ServePool``          multi-tenant batched decode scheduler
 ``MPOConfig``          how (and whether) matrices are MPO-factorized
 ``MPOEngine`` / ``engine_for`` / ``ExecutionPlan`` / ``choose_mode``
                        the phase-aware execution engine
 ``configs``            architecture registry (``configs.get_config`` /
                        ``configs.smoke_config``)
 ``optim``              masked optimizers (LFA), schedules, EF compression
+``autotune``           measured kernel tuning (cache path, reset, stats)
 
 Everything else (``repro.core.*``, ``repro.train.*``, ``repro.models.*``,
 ``repro.kernels.*``) is the low-level API underneath — stable enough to
@@ -24,8 +26,14 @@ build on, but ``Session`` is the documented entry point:
     s = Session.init("qwen3-14b")
     s.finetune(mode="lfa", steps=60)
     s.squeeze(delta=0.05, max_iters=8)
-    handle = s.serve(batch_size=8, max_len=64)
+    handle = s.serve(batch_size=8, max_len=64)     # mesh= for sharded
+    pool = s.serve_pool(slots=4, max_len=64)       # multi-tenant decode
     print(s.report())
+
+The narrative documentation lives in ``docs/``: ``architecture.md`` (how
+engine plans, pipeline stages, kernels and autotuning fit together),
+``serving.md`` (decode policy, mesh placement, ``ServePool`` semantics),
+``paper_map.md`` (paper equation/table -> module/benchmark map).
 
 Exports resolve lazily (PEP 562) so ``import repro`` stays cheap and the
 subpackages keep importing each other without cycles.
@@ -36,7 +44,7 @@ from __future__ import annotations
 import importlib
 
 __all__ = [
-    "Session", "ServeHandle", "StageRecord", "STAGES",
+    "Session", "ServeHandle", "ServePool", "StageRecord", "STAGES",
     "MPOConfig", "DENSE",
     "MPOEngine", "ExecutionPlan", "engine_for", "choose_mode",
     "ModelConfig", "ShapeConfig",
@@ -46,6 +54,7 @@ __all__ = [
 _EXPORTS = {
     "Session": "repro.pipeline",
     "ServeHandle": "repro.pipeline",
+    "ServePool": "repro.pipeline",
     "StageRecord": "repro.pipeline",
     "STAGES": "repro.pipeline",
     "MPOConfig": "repro.core.layers",

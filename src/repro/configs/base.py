@@ -13,6 +13,15 @@ def pad_to(x: int, multiple: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
+    """One architecture's full description (family, dims, MPO policy).
+
+    Usually obtained from the registry rather than built by hand::
+
+        cfg = configs.get_config("qwen3-14b")          # full scale
+        cfg = configs.smoke_config("qwen3-14b")        # CPU-sized analog
+        cfg = dataclasses.replace(cfg, num_classes=2)  # field overrides
+    """
+
     name: str
     family: str                      # dense | moe | ssm | hybrid | encdec | vlm
     num_layers: int
@@ -85,6 +94,11 @@ class ModelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
+    """One workload point: what shape of batch hits the model, and in which
+    phase.  E.g. ``ShapeConfig("serve", "prefill", seq_len=32,
+    global_batch=8)`` describes prefilling 8 prompts of 32 tokens
+    (``models.model.input_specs(cfg, shape)`` renders the input pytree)."""
+
     name: str            # train_4k | prefill_32k | decode_32k | long_500k
     kind: str            # train | prefill | decode
     seq_len: int

@@ -128,7 +128,14 @@ def flops_dense_per_token(shapes: Sequence[tuple]) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
-    """Immutable decision record for one (matrix, workload) pairing."""
+    """Immutable decision record for one (matrix, workload) pairing.
+
+    Inspect a decision (memoized; planning never runs twice per key)::
+
+        plan = engine_for(cfg.mpo).plan(shapes, tokens=1, phase="decode")
+        plan.mode        # "cached" | "factorized" | ...
+        plan.reason      # human-readable why, e.g. the FLOPs comparison
+    """
 
     mode: str                      # factorized | reconstruct | kernel | cached
     phase: str                     # train | prefill | decode
@@ -213,7 +220,14 @@ def choose_mode(cfg, shapes: Sequence[tuple], tokens: int, phase: str,
                 *, interpret: bool = True,
                 dtype: str = "float32") -> tuple[str, str]:
     """(mode, reason) for one matrix execution.  ``cfg`` is an
-    ``layers.MPOConfig``; a non-"auto" ``cfg.mode`` always wins."""
+    ``layers.MPOConfig``; a non-"auto" ``cfg.mode`` always wins.
+
+    Example::
+
+        mode, why = choose_mode(MPOConfig(), [c.shape for c in cores],
+                                tokens=4096, phase="prefill")
+        # -> ("reconstruct", "rebuild+dense ... <= chain ... FLOPs ...")
+    """
     shapes = tuple(tuple(s) for s in shapes)
     mode, _, _, reason = _decide(cfg, shapes, tokens, phase, interpret,
                                  jnp.dtype(dtype).name)
@@ -262,6 +276,13 @@ class MPOEngine:
 
     Stateless apart from the config: plans are memoized process-wide, so
     engines are cheap and ``engine_for(cfg)`` returns a shared instance.
+
+    Example::
+
+        eng = engine_for(cfg.mpo)
+        y = eng.linear(params["w_up"], x, phase="train")   # planned matmul
+        logits = eng.logits(params["embed"], h)            # tied head
+        dense = eng.cache_weights(params)                  # decode snapshot
     """
 
     def __init__(self, cfg, *, interpret: bool | None = None):
@@ -416,5 +437,12 @@ def _dense_axes_from_cores(core_axes: Sequence[tuple]) -> tuple:
 
 @functools.lru_cache(maxsize=None)
 def engine_for(cfg) -> MPOEngine:
-    """Shared engine instance per (hashable, frozen) ``MPOConfig``."""
+    """Shared engine instance per (hashable, frozen) ``MPOConfig``.
+
+    The canonical way to execute a factorized matrix::
+
+        eng = engine_for(model_cfg.mpo)
+        y = eng.linear(params["wq"], x, phase="prefill")
+        serve_tree = eng.cache_weights(params)     # serving-time snapshot
+    """
     return MPOEngine(cfg)

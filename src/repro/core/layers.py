@@ -60,7 +60,16 @@ def split_annotations(tree):
 
 @dataclasses.dataclass(frozen=True)
 class MPOConfig:
-    """How (and whether) matrices are MPO-factorized."""
+    """How (and whether) matrices are MPO-factorized.
+
+    Per-kind bond dims cap the truncation (``None`` = exact); ``mode``
+    forces an execution mode or leaves the choice to the engine's
+    phase-aware planning (``"auto"``, the default).  Example::
+
+        cfg = MPOConfig(n=5, bond_ffn=64, bond_attn=64, bond_embed=32)
+        lin = init_linear(key, 1024, 4096, cfg=cfg, kind="ffn")
+        MPOConfig(enabled=False)     # == DENSE: no factorization at all
+    """
 
     enabled: bool = True
     n: int = 5

@@ -266,6 +266,12 @@ _tuner: Autotuner | None = None
 
 
 def get_tuner() -> Autotuner:
+    """The process-wide tuner.  Mostly consulted indirectly (the engine's
+    ``_decide``), directly useful for observability::
+
+        from repro import autotune
+        autotune.get_tuner().stats()   # {"path": ..., "timing_runs": 0, ...}
+    """
     global _tuner
     if _tuner is None:
         _tuner = Autotuner()

@@ -76,7 +76,9 @@ def build_step(arch: str, shape_name: str, mesh, *, mpo: bool = True,
             cfg, mpo=dataclasses.replace(cfg.mpo, freeze_central_grads=True))
     shape = SHAPES[shape_name]
     model = M.build(cfg)
-    rules = S.make_rules(mesh, sp=cfg.parallelism == "sp")
+    # head-split guard mirrors serving (see sharding.head_safe_rules)
+    rules = S.head_safe_rules(
+        S.make_rules(mesh, sp=cfg.parallelism == "sp"), cfg, mesh)
 
     specs = M.input_specs(cfg, shape)
     in_shardings = S.batch_sharding(specs, mesh, rules)

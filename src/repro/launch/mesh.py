@@ -14,7 +14,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1):
-    """Tiny mesh over locally-available devices (tests / smoke runs)."""
-    n = len(jax.devices())
-    assert n % model == 0
+    """Tiny ``("data", "model")`` mesh over locally-available devices
+    (tests / CPU smoke runs, e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+    ``model`` is the size of the model (tensor-parallel) axis; the data axis
+    takes the rest.  Example::
+
+        mesh = make_host_mesh(model=4)   # 8 devices -> (2, 4) data x model
+    """
+    n = jax.device_count()
+    if model < 1:
+        raise ValueError(f"make_host_mesh: model={model} must be >= 1")
+    if n % model != 0:
+        raise ValueError(
+            f"make_host_mesh: model={model} does not divide the "
+            f"{n} available device(s) "
+            f"({[d.platform for d in jax.devices()[:4]]}...); pick a model-"
+            "axis size that divides jax.device_count() — on CPU, force more "
+            "devices with XLA_FLAGS=--xla_force_host_platform_device_count=N")
     return jax.make_mesh((n // model, model), ("data", "model"))

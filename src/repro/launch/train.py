@@ -55,7 +55,10 @@ def main(argv=None):
 
     mesh = make_host_mesh(model=args.model_parallel)
     sp = cfg.parallelism == "sp"
-    rules = S.make_rules(mesh, fsdp=False, sp=sp)
+    # head-split guard: never TP-shard a Q/K/V projection whose head count
+    # doesn't divide the model axis (numerically wrong under GSPMD)
+    rules = S.head_safe_rules(S.make_rules(mesh, fsdp=False, sp=sp), cfg,
+                              mesh)
     model = M.build(cfg)
 
     params, axes = model.init_params(jax.random.PRNGKey(0))

@@ -22,8 +22,8 @@ from repro.core.layers import Annot, MPOConfig
 # --------------------------------------------------------------------------
 
 
-def init_rmsnorm(dim: int):
-    return {"scale": Annot(jnp.ones((dim,), jnp.float32), ("embed",))}
+def init_rmsnorm(dim: int, axis: str | None = "embed"):
+    return {"scale": Annot(jnp.ones((dim,), jnp.float32), (axis,))}
 
 
 def apply_rmsnorm(params, x, eps: float = 1e-6):
@@ -106,8 +106,12 @@ def init_attention(key, cfg: AttnCfg, mpo: MPOConfig, *, cross: bool = False):
                             scale=(h * dh) ** -0.5),
     }
     if cfg.qk_norm:
-        p["q_norm"] = init_rmsnorm(dh)
-        p["k_norm"] = init_rmsnorm(dh)
+        # head_dim-sized scales: NOT an embed dim, so no FSDP ("embed" ->
+        # data) annotation — sharding a Dh-element broadcast scale saves
+        # nothing and has produced numerically wrong GSPMD output on
+        # forced-CPU meshes (mesh-serving bring-up)
+        p["q_norm"] = init_rmsnorm(dh, axis=None)
+        p["k_norm"] = init_rmsnorm(dh, axis=None)
     return p
 
 
@@ -183,10 +187,25 @@ def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
         if kv_x is None:  # self-attention decode: append to ring buffer
             from repro.parallel.ctx import shard_dims  # lazy: avoid cycle
             idx = cache["pos"]
-            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                              (0, idx, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                              (0, idx, 0, 0))
+            per_slot = getattr(idx, "ndim", 0) >= 1
+            if per_slot and x.shape[1] == 1:
+                # multi-tenant decode: each batch row sits at its OWN
+                # position (``pos``: (B,)) — scatter one (KV, Dh) row per
+                # slot.  Out-of-bounds writes (an idle slot past max_len)
+                # are dropped by the scatter, never clobber a live tenant.
+                rows = jnp.arange(b)
+                kc = cache["k"].at[rows, idx].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                vc = cache["v"].at[rows, idx].set(
+                    v[:, 0].astype(cache["v"].dtype))
+            else:
+                # prefill (all rows start at the same offset) or a legacy
+                # scalar-pos cache: one contiguous slice write
+                start = idx[0] if per_slot else idx
+                kc = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
             # pin the flash-decoding layout: cache seq dim model-sharded,
             # batch data-sharded (GSPMD otherwise reshards the whole cache
             # to kv-head sharding per layer — §Perf it.10)

@@ -205,11 +205,16 @@ def forward_cls(params, batch, cfg: ModelConfig):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """KV cache with PER-SLOT positions: ``pos`` is (layers, batch), so each
+    batch row ("slot") can sit at its own decode offset — the substrate for
+    multi-tenant batched decode (``pipeline.scheduler.ServePool``), where
+    finished slots are recycled mid-generation without disturbing the
+    positions of live tenants."""
     dtype = dtype or cfg.jnp_dtype
     acfg = attn_cfg(cfg)
     shape = (cfg.num_layers, batch, max_len, acfg.num_kv_heads, acfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            "pos": jnp.zeros((cfg.num_layers,), jnp.int32)}
+            "pos": jnp.zeros((cfg.num_layers, batch), jnp.int32)}
 
 
 def prefill(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
@@ -228,15 +233,21 @@ def prefill(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
 
 
 def decode_step(params, tokens, cache, cfg: ModelConfig, *, phase="decode"):
-    """One-token decode against a filled cache.  tokens: (B, 1)."""
+    """One-token decode against a filled cache.  tokens: (B, 1).
+
+    Positions are per slot (``cache["pos"]``: (layers, batch)): each batch
+    row applies RoPE at its own offset and masks keys beyond its own
+    position, so rows admitted at different times decode correctly side by
+    side in one batched step."""
     x = _embed_inputs(cfg, params, {"tokens": tokens}, phase)
     max_len = cache["k"].shape[2]
-    pos = cache["pos"][0]
-    positions = pos + jnp.zeros((1, 1), jnp.int32)
+    pos = cache["pos"][0]                          # (B,) per-slot positions
+    positions = pos[:, None]                       # (B, 1) for rope
     kj = jnp.arange(max_len)[None, :]
-    mask = (kj <= pos)[None, None]
+    mask = (kj <= pos[:, None])[:, None, None, :]  # (B, 1, 1, S)
     if cfg.local_window is not None:
-        mask_local = mask & (kj > pos - cfg.local_window)[None, None]
+        mask_local = mask & \
+            (kj > pos[:, None] - cfg.local_window)[:, None, None, :]
     else:
         mask_local = mask
     x, new_caches, _ = _run_stack(cfg, params, x, positions=positions,

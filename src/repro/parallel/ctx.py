@@ -41,6 +41,23 @@ def sequence_parallel(enabled: bool = True):
         _SP = prev
 
 
+@contextlib.contextmanager
+def maybe_mesh(mesh):
+    """``current_mesh(mesh)`` when a mesh is given, no-op otherwise — lets
+    serving code wrap its (lazily traced) jitted steps unconditionally:
+
+        with maybe_mesh(mesh):            # mesh may be None (single device)
+            logits, cache = jit_prefill(params, batch, cache)
+
+    The model's ``shard_activation`` constraints activate only under a real
+    mesh; trace-time reads of the ambient mesh happen inside the ``with``."""
+    if mesh is None:
+        yield None
+    else:
+        with current_mesh(mesh) as m:
+            yield m
+
+
 def get_mesh():
     return _MESH
 

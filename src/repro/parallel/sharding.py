@@ -46,6 +46,39 @@ def make_rules(mesh: Mesh, *, fsdp: bool = True, sp: bool = False) -> dict:
     return rules
 
 
+def head_safe_rules(rules: dict, cfg, mesh: Mesh) -> dict:
+    """Drop TP rules for flattened attention projections whose HEAD count
+    doesn't divide the model-axis product.
+
+    ``spec_for``'s divisibility fallback only sees dim sizes: a flattened
+    (H*Dh) projection dim usually IS divisible by the mesh axis even when
+    the head count is not — the shards then split ``head_dim`` across
+    devices after the (B, S, H, Dh) reshape, the exact layout
+    ``nn.init_attention`` refuses to annotate at init time (its
+    ``q_ok``/``kv_ok`` gate).  Smoke-scale configs disable that gate
+    (``shard_multiple=1``), so serving-time placement must re-check against
+    the ACTUAL mesh: a head-splitting K/V sharding is not just slow, it has
+    produced numerically wrong prefill output under GSPMD partitioning
+    (observed on the 8-device forced-CPU mesh: 2 KV heads over model=4).
+    Replicating those two projections costs little — MPO compression keeps
+    them small, the DESIGN §4 argument."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_prod(name):
+        ax = rules.get(name)
+        if ax is None:
+            return 1
+        ax = (ax,) if isinstance(ax, str) else ax
+        return math.prod(sizes[a] for a in ax)
+
+    out = dict(rules)
+    if cfg.num_heads % max(axis_prod("qkv"), 1) != 0:
+        out["qkv"] = None
+    if cfg.num_kv_heads % max(axis_prod("kv_qkv"), 1) != 0:
+        out["kv_qkv"] = None
+    return out
+
+
 def spec_for(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> P:
     """PartitionSpec with per-dim divisibility fallback."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -101,7 +134,9 @@ def batch_sharding(batch_specs, mesh: Mesh, rules: dict):
 
 def cache_sharding(cache_specs, mesh: Mesh, rules: dict):
     """Decode caches: batch dim is dim 1 (dim 0 = layers) for stacked caches,
-    heads/kv dims sharded over model when divisible."""
+    heads/kv dims sharded over model when divisible.  Integer leaves (the
+    per-slot ``pos`` counters, (layers, batch)) are tiny and stay
+    replicated — every device needs every slot's position for masking."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     b = rules["batch"]
     b = (b,) if isinstance(b, str) else b
@@ -111,6 +146,8 @@ def cache_sharding(cache_specs, mesh: Mesh, rules: dict):
     def one(sd):
         shape = sd.shape
         parts = [None] * len(shape)
+        if np.issubdtype(np.dtype(sd.dtype), np.integer):
+            return NamedSharding(mesh, P())
         if len(shape) >= 5:
             # (L, B, S, KV, Dh) kv-cache or (L, B, H, N, P) ssm state:
             # batch on the data axes; model axis on the LARGEST divisible

@@ -1,7 +1,9 @@
 """Stage-based public API for the compress -> fine-tune -> squeeze -> serve
 lifecycle.  ``Session`` is the documented entry point (``from repro import
-Session``); the layer-level modules under ``repro.core`` / ``repro.train``
-remain the low-level escape hatch."""
+Session``); ``ServePool`` (``Session.serve_pool``) schedules multi-tenant
+batched decode on top of it; the layer-level modules under ``repro.core`` /
+``repro.train`` remain the low-level escape hatch."""
 
+from repro.pipeline.scheduler import Request, ServePool  # noqa: F401
 from repro.pipeline.session import (STAGES, ServeHandle,  # noqa: F401
                                     Session, StageRecord)

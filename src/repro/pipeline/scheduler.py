@@ -1,0 +1,302 @@
+"""Multi-tenant batched decode: ``ServePool`` packs independent generation
+requests into a fixed ``(slots, max_len)`` decode batch.
+
+The serving substrate (``make_serve_steps`` + the per-slot-position KV cache
+from ``transformer.init_cache``) decodes a whole batch in one jitted step,
+each row at its OWN offset.  ``ServePool`` is the scheduler on top:
+
+* ``submit()`` enqueues a request (prompt + token budget + optional EOS);
+* admission prefills the prompt on a dedicated batch-1 cache and SCATTERS
+  the resulting KV rows (and per-slot position) into a free slot of the
+  pool cache — live tenants' rows are untouched, so admitting tenant B
+  never re-prefills tenant A;
+* every ``step()`` runs ONE batched decode over all slots; finished rows
+  (budget exhausted or EOS emitted) free their slot, which the next
+  admission recycles;
+* ``stats()`` reports slot occupancy and aggregate tokens/s —
+  ``Session.report()`` surfaces it for every pool the session created.
+
+The aggregate win is the usual continuous-batching one: a decode step over
+``k`` live slots costs roughly the same wall time as over one, so serving
+``k`` tenants concurrently multiplies tokens/s until the step becomes
+compute-bound (``benchmarks/serve_pool.py`` tracks the curve).
+
+Works transparently over a mesh-sharded serving state (``mesh=`` — see
+``docs/serving.md``): the pool cache lives in the flash-decoding layout and
+admission scatters into the sharded rows.
+
+Example::
+
+    pool = session.serve_pool(slots=4, max_len=64)
+    for p in prompts:                       # independent tenants
+        pool.submit(p, max_new_tokens=16)
+    outputs = pool.run()                    # {rid: np.ndarray of token ids}
+    print(pool.stats()["tok_per_s"])
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.steps import make_serve_steps
+
+# families whose decode step tolerates per-slot state: transformers carry
+# per-slot positions in the KV cache; SSM states are position-free.
+# hybrid/encdec caches still hold one shared position per segment, and the
+# vlm/encdec frontends need more than a token prompt at admission.
+SUPPORTED_FAMILIES = ("dense", "moe", "ssm")
+
+
+@dataclasses.dataclass
+class Request:
+    """One tenant's generation request, tracked by the pool.
+
+    ``tokens`` accumulates the generated ids (the first comes from the
+    admission prefill, the rest from batched decode steps); ``done`` flips
+    when the budget is exhausted or ``eos_id`` was emitted."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def output(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+
+class ServePool:
+    """Fixed-slot multi-tenant decode scheduler over one weight snapshot.
+
+    Built once per serving session (``Session.serve_pool``): runs
+    ``init_serve`` for the pool batch (weight-cache contraction + pool KV
+    cache); the admission prefill path reuses that same weight snapshot
+    over a batch-1 cache template (serve params are batch-independent — no
+    second contraction, no second mesh placement).  The snapshot is taken
+    at construction — like ``ServeHandle``, a pool built before a
+    ``finetune``/``squeeze`` keeps serving the OLD weights; build a new
+    pool after mutating the session.
+    """
+
+    def __init__(self, model, params, slots: int, max_len: int, *,
+                 weight_cache: bool = True, mesh=None, rules=None,
+                 axes=None, version: int = 0):
+        if model.cfg.family not in SUPPORTED_FAMILIES:
+            raise NotImplementedError(
+                f"ServePool supports families {SUPPORTED_FAMILIES}; "
+                f"{model.cfg.family!r} decode still tracks one shared "
+                "position per cache segment (or needs a non-token frontend "
+                "at admission), so slots cannot sit at independent offsets")
+        if slots < 1:
+            raise ValueError(f"slots={slots} must be >= 1")
+        self.slots, self.max_len = slots, max_len
+        self.mesh = mesh
+        self.version = version
+        t0 = time.perf_counter()
+        # pool-batch steps: one jitted decode over all slots
+        prefill, self._decode, init_pool = make_serve_steps(
+            model, weight_cache=weight_cache, mesh=mesh, rules=rules,
+            axes=axes)
+        self._sparams, self._cache = init_pool(params, slots, max_len)
+        # Admission path: batch-1 prefill over the SAME weight snapshot —
+        # serve params are batch-independent, so the pool never contracts
+        # (or, under a mesh, places) a second copy of the weights.  Only a
+        # batch-1 cache template is extra.  The pool's mesh-jitted prefill
+        # is pinned to the pool cache's shardings, so admission gets its
+        # own jit; the committed placement of ``_sparams`` carries through
+        # it without explicit in_shardings.
+        if mesh is None:
+            self._decode = jax.jit(self._decode)
+            self._prefill1 = jax.jit(prefill)
+            self._cache1_template = model.init_cache(1, max_len)
+        else:
+            from repro.parallel import sharding as S
+            from repro.parallel.ctx import maybe_mesh
+            rules1 = S.make_rules(mesh) if rules is None else rules
+            cache1 = model.init_cache(1, max_len)
+            cshard1 = S.cache_sharding(
+                jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                             cache1), mesh, rules1)
+            self._cache1_template = jax.device_put(cache1, cshard1)
+            jit1 = jax.jit(
+                lambda p, b, c: model.prefill(p, b, c, phase="prefill"))
+
+            def prefill1(p, b, c):
+                with maybe_mesh(mesh):  # activation constraints at trace
+                    return jit1(p, b, c)
+
+            self._prefill1 = prefill1
+        self.init_seconds = time.perf_counter() - t0
+
+        self._adopt = jax.jit(self._adopt_fn)
+        self._requests: dict[int, Request] = {}
+        self._queue: collections.deque[int] = collections.deque()
+        self._slot_rid: list[int | None] = [None] * slots
+        self._last_tok = np.zeros((slots, 1), np.int32)
+        self._next_rid = 0
+        # ---- stats ----
+        self._decode_steps = 0
+        self._live_slot_steps = 0       # sum of live slots over decode steps
+        self._tokens_generated = 0
+        self._completed = 0
+        self._decode_seconds = 0.0
+        self._admit_seconds = 0.0
+
+    # ---- admission ----
+
+    @staticmethod
+    def _adopt_fn(pool_cache, one_cache, slot):
+        """Scatter a batch-1 cache's rows into pool slot ``slot``: every
+        leaf is (layers, batch, ...), so row ``slot`` of each leaf takes the
+        admitted tenant's KV/positions/state while all other rows pass
+        through untouched."""
+        def one(pc, oc):
+            return pc.at[:, slot].set(oc[:, 0].astype(pc.dtype))
+        return jax.tree.map(one, pool_cache, one_cache)
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: int | None = None) -> int:
+        """Enqueue one generation request; returns its request id.  The
+        prompt is a 1-D sequence of token ids; admission happens at the next
+        ``step()``/``run()`` when a slot is free."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens={max_new_tokens} must be >= 1")
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size} tokens) + max_new_tokens "
+                f"({max_new_tokens}) exceeds the pool max_len "
+                f"({self.max_len}); raise max_len or shorten the request")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._requests[rid] = Request(rid, prompt, max_new_tokens, eos_id)
+        self._queue.append(rid)
+        return rid
+
+    def _finish(self, req: Request):
+        req.done = True
+        self._completed += 1
+
+    def _admit_one(self, slot: int, req: Request):
+        """Prefill the prompt at batch 1 and scatter its cache rows into
+        ``slot``.  The prefill's last-position logits yield the tenant's
+        FIRST generated token (mirror of ``ServeHandle.generate``)."""
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+        logits, cache1 = self._prefill1(self._sparams, batch,
+                                        self._cache1_template)
+        first = int(np.asarray(jnp.argmax(logits[:, -1], -1))[0])
+        req.tokens.append(first)
+        self._tokens_generated += 1
+        if req.max_new_tokens == 1 or first == req.eos_id:
+            self._finish(req)       # never occupies the slot
+        else:
+            self._slot_rid[slot] = req.rid
+            self._last_tok[slot, 0] = first
+            self._cache = self._adopt(self._cache, cache1,
+                                      jnp.int32(slot))
+        self._admit_seconds += time.perf_counter() - t0
+
+    def _admit(self):
+        # keep scanning: an admission that finishes instantly (one-token
+        # budget / first-token EOS) leaves its slot free for the next
+        # pending request in the SAME pass
+        progressed = True
+        while self._queue and progressed:
+            progressed = False
+            for slot in range(self.slots):
+                if not self._queue:
+                    return
+                if self._slot_rid[slot] is None:
+                    self._admit_one(slot,
+                                    self._requests[self._queue.popleft()])
+                    progressed = True
+
+    # ---- decode ----
+
+    @property
+    def live(self) -> int:
+        """Currently occupied slots."""
+        return sum(r is not None for r in self._slot_rid)
+
+    @property
+    def pending(self) -> int:
+        """Submitted but not yet admitted requests."""
+        return len(self._queue)
+
+    def step(self) -> int:
+        """Admit whatever fits, then run ONE batched decode step over all
+        slots.  Returns the number of live slots that advanced (0 means the
+        pool is drained)."""
+        self._admit()
+        if self.live == 0:
+            return 0
+        t0 = time.perf_counter()
+        tok, _, self._cache = self._decode(self._sparams,
+                                           jnp.asarray(self._last_tok),
+                                           self._cache)
+        tok_host = np.asarray(tok)
+        self._decode_seconds += time.perf_counter() - t0
+        self._decode_steps += 1
+        advanced = 0
+        for slot, rid in enumerate(self._slot_rid):
+            if rid is None:
+                continue
+            advanced += 1
+            req = self._requests[rid]
+            t = int(tok_host[slot, 0])
+            req.tokens.append(t)
+            self._tokens_generated += 1
+            self._last_tok[slot, 0] = t
+            if len(req.tokens) >= req.max_new_tokens or t == req.eos_id:
+                self._finish(req)
+                self._slot_rid[slot] = None   # recycled at next admission
+        self._live_slot_steps += advanced
+        return advanced
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the pool: step until every submitted request completed.
+        Returns {rid: generated token ids} for ALL finished requests."""
+        while self._queue or self.live > 0:
+            if self.step() == 0 and not self._queue:
+                break
+        return {rid: r.output for rid, r in self._requests.items()
+                if r.done}
+
+    # ---- reporting ----
+
+    def stats(self) -> dict:
+        """Scheduler counters: slot occupancy (mean live fraction per decode
+        step), aggregate tokens/s (prefill-admissions included in the
+        denominator), and admission/completion totals."""
+        busy = self._decode_seconds + self._admit_seconds
+        return {
+            "slots": self.slots,
+            "max_len": self.max_len,
+            "mesh": None if self.mesh is None else
+            dict(zip(self.mesh.axis_names, self.mesh.devices.shape)),
+            "submitted": self._next_rid,
+            "completed": self._completed,
+            "pending": self.pending,
+            "live": self.live,
+            "decode_steps": self._decode_steps,
+            "tokens_generated": self._tokens_generated,
+            "occupancy": (self._live_slot_steps
+                          / max(self._decode_steps * self.slots, 1)),
+            "decode_seconds": round(self._decode_seconds, 4),
+            "admit_seconds": round(self._admit_seconds, 4),
+            "init_seconds": round(self.init_seconds, 4),
+            "tok_per_s": round(self._tokens_generated / busy, 1)
+            if busy > 0 else 0.0,
+            "weights_version": self.version,
+        }

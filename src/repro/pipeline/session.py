@@ -58,7 +58,9 @@ STAGES = ("init", "from_dense", "finetune", "squeeze", "serve")
 
 @dataclasses.dataclass(frozen=True)
 class StageRecord:
-    """One completed stage transition, for ``Session.report()``."""
+    """One completed stage transition, for ``Session.report()`` — e.g.
+    ``StageRecord("finetune", 12.3, {"steps": 60, "trainable": 91321})``
+    appears as ``report()["stages"][i]``."""
     stage: str
     seconds: float
     info: dict
@@ -72,21 +74,37 @@ class ServeHandle:
     """A bound serving session: jitted prefill/decode steps over a weight
     snapshot taken ONCE at construction (``init_serve``: KV-cache allocation
     + ``MPOEngine.cache_weights`` densification).  Carries the weights
-    version it was built from so ``Session.serve`` can detect staleness."""
+    version it was built from so ``Session.serve`` can detect staleness.
+
+    With ``mesh=`` the snapshot is PLACED on a ``jax.sharding.Mesh``: dense
+    cached Ws carry the ``NamedSharding`` their cores' TP layout implies,
+    still-factorized tables keep per-core placements, and the prefill/decode
+    steps run with explicit ``in_shardings``/``out_shardings`` (the KV cache
+    pinned to its flash-decoding layout).  Example::
+
+        handle = session.serve(batch_size=8, max_len=64)
+        out = handle.generate({"tokens": prompts}, num_tokens=16)  # (8, 16)
+    """
 
     def __init__(self, model, params, batch_size: int, max_len: int, *,
-                 weight_cache: bool = True, version: int = 0):
+                 weight_cache: bool = True, version: int = 0,
+                 mesh=None, rules=None, axes=None):
         self.batch_size, self.max_len = batch_size, max_len
         self.weight_cache = weight_cache
         self.version = version
+        self.mesh = mesh
         prefill_step, decode_step, init_serve = make_serve_steps(
-            model, weight_cache=weight_cache)
+            model, weight_cache=weight_cache, mesh=mesh, rules=rules,
+            axes=axes)
         t0 = time.perf_counter()
         self.params, self._cache0 = jax.block_until_ready(
             init_serve(params, batch_size, max_len))
         self.init_seconds = time.perf_counter() - t0
-        self._prefill = jax.jit(prefill_step)
-        self._decode = jax.jit(decode_step)
+        # mesh-sharded steps come back already jitted (with explicit
+        # shardings); wrapping them again would erase those
+        jitted = getattr(prefill_step, "jitted", False)
+        self._prefill = prefill_step if jitted else jax.jit(prefill_step)
+        self._decode = decode_step if jitted else jax.jit(decode_step)
         self.cache = self._cache0
 
     def reset(self):
@@ -119,7 +137,18 @@ class ServeHandle:
 class Session:
     """Owns params, the ``MPOEngine``, the trainability mask, and weight-
     cache validity across the compress -> fine-tune -> squeeze -> serve
-    lifecycle.  See the module docstring for the stage diagram."""
+    lifecycle.  See the module docstring for the stage diagram.
+
+    Example (the paper's full workflow at smoke scale)::
+
+        from repro import Session
+        s = Session.init("qwen3-14b")          # or .from_dense(ckpt, cfg)
+        s.finetune(mode="lfa", steps=60)       # auxiliary tensors only
+        s.squeeze(delta=0.05, max_iters=8)     # Algorithm 2
+        out = s.serve(8, 64).generate(batch, num_tokens=16)
+        pool = s.serve_pool(slots=4, max_len=64)   # multi-tenant decode
+        print(s.report())                      # rho, reductions, pool stats
+    """
 
     def __init__(self, cfg: ModelConfig, params, axes=None):
         self.cfg = cfg
@@ -133,9 +162,13 @@ class Session:
         self.stage = "init"
         self._records: list[StageRecord] = []
         self._version = 0                 # bumped on every core mutation
-        # (batch, max_len, weight_cache) -> ServeHandle, all at _version;
-        # cleared on every bump so a stale snapshot is never reused
+        # (batch, max_len, weight_cache, mesh, rules) -> ServeHandle, all at
+        # _version; cleared on every bump so a stale snapshot is never reused
         self._serve: dict[tuple, ServeHandle] = {}
+        # ServePools are observed weakly: report() surfaces stats for pools
+        # the caller still holds, without the session pinning every pool's
+        # weight snapshot for its whole lifetime
+        self._pools: list = []            # list[weakref.ref[ServePool]]
         self._loss_default: Callable | None = None
         # (mode, lr, wd, loss id, params treedef) -> (mask, optimizer, step):
         # reusing the same jitted step across finetune calls / squeeze
@@ -408,26 +441,86 @@ class Session:
     # ---- serve ----
 
     def serve(self, batch_size: int, max_len: int, *,
-              weight_cache: bool = True) -> ServeHandle:
+              weight_cache: bool = True, mesh=None,
+              rules: dict | None = None) -> ServeHandle:
         """Serving handle for the CURRENT weights.  The one-time
         ``init_serve`` (KV cache + cached-W contraction) runs only when no
-        valid handle exists for this (batch, max_len, weight_cache) shape:
-        handles built before any ``finetune``/``squeeze`` were dropped at
-        the version bump and are rebuilt, never reused; handles for other
-        shapes at the current version stay cached."""
+        valid handle exists for this (batch, max_len, weight_cache, mesh)
+        shape: handles built before any ``finetune``/``squeeze`` were
+        dropped at the version bump and are rebuilt, never reused; handles
+        for other shapes at the current version stay cached.
+
+        ``mesh=`` places the serving state on a ``jax.sharding.Mesh``
+        (``launch.mesh.make_host_mesh`` / ``make_production_mesh``): cached
+        dense Ws inherit their cores' TP layout as ``NamedSharding``s,
+        factorized tables stay factorized with per-core placements, and the
+        prefill/decode steps carry explicit in/out shardings.  ``rules``
+        overrides the default ``parallel.sharding.make_rules(mesh)`` logical
+        axis -> mesh axis mapping.  Example::
+
+            from repro.launch.mesh import make_host_mesh
+            handle = session.serve(8, 64, mesh=make_host_mesh(model=4))
+        """
         t0 = time.perf_counter()
-        key = (batch_size, max_len, weight_cache)
+        if mesh is not None and self.axes is None:
+            raise ValueError(
+                "Session.serve(mesh=...) needs the logical-axis tree; this "
+                "session was constructed without one (Session(cfg, params)) "
+                "— build it via Session.init/from_dense, or pass axes to "
+                "the constructor")
+        rules_key = None if rules is None else tuple(sorted(rules.items()))
+        key = (batch_size, max_len, weight_cache, mesh, rules_key)
         h = self._serve.get(key)
         if h is not None:
             return h.reset()
         handle = ServeHandle(self.model, self.params, batch_size, max_len,
                              weight_cache=weight_cache,
-                             version=self._version)
+                             version=self._version, mesh=mesh, rules=rules,
+                             axes=self.axes if mesh is not None else None)
         self._serve[key] = handle
         self._record("serve", t0, {"batch": batch_size, "max_len": max_len,
                                    "weight_cache": weight_cache,
+                                   "mesh": None if mesh is None else
+                                   dict(zip(mesh.axis_names,
+                                            mesh.devices.shape)),
                                    "init_seconds": handle.init_seconds})
         return handle
+
+    def serve_pool(self, slots: int, max_len: int, *,
+                   weight_cache: bool = True, mesh=None,
+                   rules: dict | None = None):
+        """Multi-tenant batched decode over the CURRENT weights: a
+        ``pipeline.scheduler.ServePool`` with ``slots`` decode rows.
+        Independent requests are admitted into free slots (batch-1 prefill
+        scattered into the pool KV cache), decode advances ALL live tenants
+        in one jitted step, and finished slots are recycled without
+        re-prefilling anyone.  Pool stats surface in ``Session.report()``.
+
+        Like ``serve()``, the pool snapshots the weights at construction
+        (``mesh=`` places them on a device mesh); build a new pool after
+        any ``finetune``/``squeeze``.  Example::
+
+            pool = session.serve_pool(slots=4, max_len=64)
+            rids = [pool.submit(p, max_new_tokens=16) for p in prompts]
+            outputs = pool.run()            # {rid: token ids}
+        """
+        from repro.pipeline.scheduler import ServePool  # lazy: keep import cheap
+        if mesh is not None and self.axes is None:
+            raise ValueError(
+                "Session.serve_pool(mesh=...) needs the logical-axis tree; "
+                "build the session via Session.init/from_dense")
+        t0 = time.perf_counter()
+        import weakref
+        pool = ServePool(self.model, self.params, slots, max_len,
+                         weight_cache=weight_cache, mesh=mesh, rules=rules,
+                         axes=self.axes if mesh is not None else None,
+                         version=self._version)
+        self._pools = [r for r in self._pools if r() is not None]
+        self._pools.append(weakref.ref(pool))
+        self._record("serve", t0, {"pool": True, "slots": slots,
+                                   "max_len": max_len,
+                                   "init_seconds": pool.init_seconds})
+        return pool
 
     # ---- report ----
 
@@ -457,6 +550,13 @@ class Session:
             out["conversion_mean_rel_err"] = float(np.mean(errs))
         if self.squeeze_history:
             out["squeeze_events"] = len(self.squeeze_history)
+        pools = [ref() for ref in self._pools]
+        if any(p is not None for p in pools):
+            # multi-tenant serving: slot occupancy + aggregate tok/s for
+            # every still-alive ServePool this session created (weakly
+            # held; stale-version pools included — their stats carry the
+            # version they serve)
+            out["serve_pools"] = [p.stats() for p in pools if p is not None]
         from repro.kernels import autotune  # lazy: report stays cheap
         tuner = autotune.get_tuner()
         if tuner.timing_runs or tuner.stats()["keys_resolved"]:

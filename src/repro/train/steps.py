@@ -108,17 +108,50 @@ def make_eval_step(model: Model, loss_fn: Callable | None = None):
 # --------------------------------------------------------------------------
 
 
-def make_serve_steps(model: Model, *, weight_cache: bool = True):
+def make_serve_steps(model: Model, *, weight_cache: bool = True,
+                     mesh=None, rules: dict | None = None, axes=None):
     """(prefill_step, decode_step, init_serve) for batched serving.
 
     ``init_serve(params, batch, max_len)`` runs ONCE per serving session: it
-    allocates the KV cache and — when ``weight_cache`` — contracts every
-    factorized matrix whose decode plan is ``cached`` into its dense W
+    allocates the KV cache (per-slot positions — see
+    ``transformer.init_cache``) and — when ``weight_cache`` — contracts
+    every factorized matrix whose decode plan is ``cached`` into its dense W
     (``MPOEngine.cache_weights``), returning ``(serve_params, cache)``.  The
     decode loop then performs zero per-step core contractions; pass the
     returned ``serve_params`` (not the raw training params) to the steps.
-    The weight cache is a snapshot — re-run ``init_serve`` after any core
-    mutation (training, ``tt_round``, dimension squeezing).
+
+    The weight cache is a SNAPSHOT of the cores, not a view: any core
+    mutation after it was taken (further training, ``tt_round``, dimension
+    squeezing) silently invalidates it, so ``init_serve`` must be re-run
+    from the mutated cores.  ``Session`` automates exactly this — it
+    version-stamps the weights on every mutation and rebuilds the serving
+    snapshot on the next ``serve()`` instead of reusing a stale one.
+
+    Mesh-sharded serving (``mesh=``, optional ``rules=``, required
+    ``axes=``): the serving state is PLACED on a ``jax.sharding.Mesh``
+    instead of replicated per host —
+
+    * the densified weight cache flows through
+      ``cache_weights(axes=...)`` so each dense W inherits its cores' TP
+      layout, then through ``parallel.sharding.tree_shardings`` into
+      ``NamedSharding``-committed device arrays;
+    * matrices that STAY factorized (heavily compressed embedding tables)
+      get per-core specs — the compression win is never resurrected as a
+      replicated dense table;
+    * the returned prefill/decode steps are jitted with
+      ``in_shardings``/``out_shardings``: params pinned to their layout,
+      the KV cache to ``parallel.sharding.cache_sharding`` (batch over
+      ``data``, cache seq dim over ``model`` — the flash-decoding layout),
+      prompt/token inputs and logits replicated.
+
+    Example::
+
+        mesh = make_host_mesh(model=4)            # 8 devices -> (2, 4)
+        params, axes = model.init_params(key)
+        prefill, decode, init_serve = make_serve_steps(
+            model, mesh=mesh, axes=axes)
+        sparams, cache = init_serve(params, batch=8, max_len=128)
+        logits, cache = prefill(sparams, batch_inputs, cache)
     """
 
     def init_serve(params, batch: int, max_len: int):
@@ -135,7 +168,58 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True):
         next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         return next_tok, logits, cache
 
-    return prefill_step, decode_step, init_serve
+    if mesh is None:
+        return prefill_step, decode_step, init_serve
+
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.parallel import sharding as S
+    from repro.parallel.ctx import maybe_mesh
+
+    if axes is None:
+        raise ValueError(
+            "make_serve_steps(mesh=...) needs axes= (the logical-axis tree "
+            "from model.init_params / split_annotations) to place the "
+            "serving params on the mesh")
+    rules = S.make_rules(mesh) if rules is None else rules
+    # never let a K/V projection shard split head_dim across devices
+    # (numerically wrong under GSPMD — see head_safe_rules)
+    rules = S.head_safe_rules(rules, model.cfg, mesh)
+    repl = NamedSharding(mesh, PartitionSpec())
+    _specs = lambda tree: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    jitted: dict = {}
+
+    def init_serve_mesh(params, batch: int, max_len: int):
+        cache = model.init_cache(batch, max_len)
+        if weight_cache:
+            serve_params, serve_axes = model.cache_weights(params, axes=axes)
+        else:
+            serve_params, serve_axes = params, axes
+        pshard = S.tree_shardings(serve_axes, _specs(serve_params), mesh,
+                                  rules)
+        cshard = S.cache_sharding(_specs(cache), mesh, rules)
+        serve_params = jax.device_put(serve_params, pshard)
+        cache = jax.device_put(cache, cshard)
+        jitted["prefill"] = jax.jit(prefill_step,
+                                    in_shardings=(pshard, repl, cshard),
+                                    out_shardings=(repl, cshard))
+        jitted["decode"] = jax.jit(decode_step,
+                                   in_shardings=(pshard, repl, cshard),
+                                   out_shardings=(repl, repl, cshard))
+        return serve_params, cache
+
+    def prefill_sharded(params, batch, cache):
+        with maybe_mesh(mesh):  # activation constraints active at trace
+            return jitted["prefill"](params, batch, cache)
+
+    def decode_sharded(params, tokens, cache):
+        with maybe_mesh(mesh):
+            return jitted["decode"](params, tokens, cache)
+
+    # the returned steps are already jit-backed with explicit shardings:
+    # callers (ServeHandle) must not wrap them in a second jax.jit
+    prefill_sharded.jitted = decode_sharded.jitted = True
+    return prefill_sharded, decode_sharded, init_serve_mesh
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Relative-link checker for the docs tree (CI `docs` job).
+
+Scans README.md and docs/**/*.md for markdown links/images and verifies
+that every RELATIVE target exists on disk (anchors stripped; http(s)/mailto
+links skipped — the build must not depend on the network).  Exits non-zero
+listing every dead link.
+
+Run:  python tools/check_links.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) and ![alt](target); target ends at the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    for dirpath, _, names in os.walk(docs):
+        files += [os.path.join(dirpath, n) for n in sorted(names)
+                  if n.endswith(".md")]
+    return [f for f in files if os.path.exists(f)]
+
+
+def check(files: list[str]) -> list[str]:
+    dead = []
+    for path in files:
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks don't contain real links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                dead.append(f"{os.path.relpath(path, ROOT)}: dead link "
+                            f"'{target}' -> {os.path.relpath(resolved, ROOT)}")
+    return dead
+
+
+def main() -> int:
+    files = doc_files()
+    dead = check(files)
+    for line in dead:
+        print(f"DEAD  {line}")
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if dead else 'OK'} ({len(dead)} dead link(s))")
+    return 1 if dead else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
