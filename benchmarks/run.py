@@ -11,8 +11,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (engine_modes, fig2_lowrank, kernel_vjp, roofline,
-                            serve_pool, table1_variation, table2_complexity,
+    from benchmarks import (decode_attention, engine_modes, fig2_lowrank,
+                            kernel_vjp, roofline, serve_pool,
+                            table1_variation, table2_complexity,
                             table3_glue_analog, table4_variants,
                             table5_last_layers)
     suites = {
@@ -26,6 +27,7 @@ def main() -> None:
         "engine": engine_modes.run,
         "kernel": kernel_vjp.run,
         "serve_pool": serve_pool.run,
+        "decode_attn": decode_attention.run,
     }
     want = sys.argv[1:] or list(suites)
     for name in want:

@@ -2,6 +2,8 @@
 
 - ``mpo_linear`` — differentiable fused MPO-reconstruct + matmul (custom
   VJP: core-space gradient accumulation, no dense dW);
+- ``decode_attention`` — flash decoding over a paged KV cache (online
+  softmax, page-table indexed KV streaming) + the XLA gather fallback;
 - ``ssd_scan``  — chunked SSD recurrence for the SSM families;
 - ``autotune``  — measured (mode, block_m) selection with an on-disk cache;
 - ``ops``       — jit'd public wrappers (the engine's entry point);

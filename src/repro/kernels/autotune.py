@@ -48,12 +48,16 @@ ENV_MEASURE = "REPRO_AUTOTUNE_MEASURE"
 
 CACHE_VERSION = 1
 # the "small candidate grid" of tile heights; candidates collapse to one
-# entry when the token count caps the effective tile anyway
-CANDIDATE_BLOCK_MS = (64, 128, 256, 512)
+# entry when the token count caps the effective tile anyway.  1024/2048
+# exist for long-prefill shapes (4k+ token calls) where a 512 tile leaves
+# the MXU underfed — they dedupe away at short token counts.
+CANDIDATE_BLOCK_MS = (64, 128, 256, 512, 1024, 2048)
 BENCH_WARMUP = 1   # compile + cache warm, excluded from timing
 BENCH_REPS = 3     # best-of
 
-_TUNABLE_MODES = ("factorized", "reconstruct", "kernel")
+# "flash"/"xla" are the decode-attention race (kernels.decode_attention);
+# they share this cache and key scheme but bring their own candidates_fn
+_TUNABLE_MODES = ("factorized", "reconstruct", "kernel", "flash", "xla")
 
 
 def cache_path() -> str:
@@ -207,7 +211,11 @@ class Autotuner:
         return self._disk
 
     def get(self, shapes: Sequence[tuple], tokens: int, phase: str,
-            dtype: str, interpret: bool) -> TuneResult:
+            dtype: str, interpret: bool,
+            candidates_fn=None) -> TuneResult:
+        """``candidates_fn`` defaults to the MPO-linear grid; other kernels
+        (decode attention) pass their own ``(shapes, tokens, phase, dtype,
+        interpret) -> [(label, thunk)]`` builder and share the cache."""
         shapes = tuple(tuple(s) for s in shapes)
         key = make_key(shapes, tokens, phase, dtype, interpret)
         hit = self._mem.get(key)
@@ -222,7 +230,8 @@ class Autotuner:
                                     key=lambda kv: kv[1])))
             self._mem[key] = result
             return result
-        result = self.measure(shapes, tokens, phase, dtype, interpret)
+        result = self.measure(shapes, tokens, phase, dtype, interpret,
+                              candidates_fn)
         self._mem[key] = result
         # re-read before persisting: another process may have tuned other
         # keys since our first load — dumping the stale snapshot would
@@ -234,10 +243,11 @@ class Autotuner:
         _write_cache(self.path, entries)
         return result
 
-    def measure(self, shapes, tokens, phase, dtype,
-                interpret) -> TuneResult:
+    def measure(self, shapes, tokens, phase, dtype, interpret,
+                candidates_fn=None) -> TuneResult:
+        candidates_fn = candidates_fn or _candidates
         timings = [(label, self._time(fn)) for label, fn in
-                   _candidates(shapes, tokens, phase, dtype, interpret)]
+                   candidates_fn(shapes, tokens, phase, dtype, interpret)]
         timings.sort(key=lambda kv: kv[1])
         mode, block_m = _parse_label(timings[0][0])
         return TuneResult(mode=mode, block_m=block_m, source="measured",

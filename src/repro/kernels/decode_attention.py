@@ -1,0 +1,239 @@
+"""Pallas flash decode-attention over a paged KV cache.
+
+Decode is memory-bound: a dense ``(slots, max_len)`` KV cache makes every
+slot pay ``max_len`` bandwidth per token even when its context is 10 tokens
+long.  This module provides the serving-side fix:
+
+* ``flash_decode_attention`` — one Pallas program per (slot, kv-head)
+  streams that slot's KV *pages* through VMEM with an online softmax
+  (running max / normalizer / accumulator in f32 scratch).  The KV
+  ``BlockSpec`` index map resolves the slot's page table and CLAMPS the
+  logical page index at the slot's last valid page: Mosaic skips the DMA
+  when consecutive grid steps ask for the same block, so a slot's HBM
+  traffic scales with its own length, not with ``max_len``.  Compute for
+  out-of-length pages is predicated off with ``pl.when``.
+* ``gather_pages`` — the XLA fallback's view: gathers a slot's pages back
+  into a contiguous ``(B, kv_len, KV, Dh)`` tensor so the caller can run
+  the exact same ``nn.attention_scores`` path the dense cache uses (token
+  parity with the dense path is therefore trivial).
+* ``choose_impl`` — the dispatch decision, made at trace time from static
+  shape/dtype info.  On measuring substrates it registers both
+  implementations with the PR-3 autotuner (``kernels.autotune``) and races
+  them per (head-config, context-bucket, dtype, backend); interpret-mode /
+  CPU runs keep the XLA reference path unless ``REPRO_DECODE_ATTN=flash``
+  forces the kernel (tests do).
+
+The paged cache itself (page table, free-list allocation, append-on-decode)
+lives in ``models/nn.py`` / ``models/transformer.py``; this module only
+consumes its leaves.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ENV_IMPL = "REPRO_DECODE_ATTN"      # "flash" | "xla" force-override
+MASK_VALUE = -2.3819763e38          # same fill nn.attention_scores uses
+_TINY = 1e-30                       # zero-valid-keys guard (idle slots)
+
+
+# --------------------------------------------------------------------------
+# flash kernel
+# --------------------------------------------------------------------------
+
+
+def _flash_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, bias_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page_size: int, scale: float,
+                  softcap: float | None):
+    """Grid (B, KV, num_pages); page index innermost so the f32 scratch
+    (acc / running max / normalizer) persists across a slot's pages."""
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    npages = (lens_ref[b] + page_size - 1) // page_size
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(p < npages)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (ps, Dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = s + bias_ref[0][None, :]               # additive mask, (1, ps)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        w = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(w, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            w, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(p == jnp.maximum(npages, 1) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], _TINY)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _kv_index_map(b, h, p, table, lens, *, page_size, max_pages):
+    """Physical page for (slot b, logical page p), clamped to the slot's
+    last valid page — consecutive identical block indices make Mosaic skip
+    the re-fetch, which is what bounds a slot's bandwidth by its length."""
+    npages = (lens[b] + page_size - 1) // page_size
+    lp = jnp.minimum(p, jnp.maximum(npages - 1, 0))
+    phys = jnp.maximum(table[b * max_pages + lp], 0)
+    return phys, 0, h, 0
+
+
+def _bias_index_map(b, h, p, table, lens, *, page_size):
+    npages = (lens[b] + page_size - 1) // page_size
+    return b, jnp.minimum(p, jnp.maximum(npages - 1, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def flash_decode_attention(q, k_pages, v_pages, page_table, lengths, bias,
+                           *, softcap: float | None = None,
+                           interpret: bool = True):
+    """Single-token flash decoding over paged KV.
+
+    q:          (B, KV, G, Dh)   — grouped query heads (H = KV * G)
+    k_pages:    (P, ps, KV, Dh)  — physical page pool (v_pages alike)
+    page_table: (B, MP) int32    — logical -> physical page, -1 = unmapped
+    lengths:    (B,) int32       — valid keys per slot (<= MP * ps)
+    bias:       (B, MP * ps) f32 — additive mask (0 keep / MASK_VALUE drop)
+
+    Returns (B, KV, G, Dh) in q's dtype.  Softmax statistics are f32.
+    """
+    b, kv, g, dh = q.shape
+    _, page_size, _, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    grid = (b, kv, max_pages)
+    kv_map = functools.partial(_kv_index_map, page_size=page_size,
+                               max_pages=max_pages)
+    bias_map = functools.partial(_bias_index_map, page_size=page_size)
+    kernel = functools.partial(_flash_kernel, page_size=page_size,
+                               scale=1.0 / math.sqrt(dh), softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dh), lambda b, h, p, t, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, dh), kv_map),
+                pl.BlockSpec((1, page_size, 1, dh), kv_map),
+                pl.BlockSpec((1, page_size), bias_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, dh),
+                                   lambda b, h, p, t, L: (b, h, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((g, dh), jnp.float32),
+                            pltpu.VMEM((g, 1), jnp.float32),
+                            pltpu.VMEM((g, 1), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), q.dtype),
+        interpret=interpret,
+    )(page_table.reshape(-1), lengths, q, k_pages, v_pages, bias)
+
+
+# --------------------------------------------------------------------------
+# XLA fallback view
+# --------------------------------------------------------------------------
+
+
+def gather_pages(pages, page_table):
+    """(P, ps, KV, Dh) pages + (B, MP) table -> contiguous (B, MP*ps, KV, Dh).
+
+    Unmapped (-1) entries are clamped to page 0 — their positions are past
+    every slot's length, so the caller's mask zeroes them exactly and token
+    parity with the dense-cache path is preserved."""
+    b, mp = page_table.shape
+    _, ps, kv, dh = pages.shape
+    out = pages[jnp.maximum(page_table, 0)]        # (B, MP, ps, KV, Dh)
+    return out.reshape(b, mp * ps, kv, dh)
+
+
+# --------------------------------------------------------------------------
+# dispatch (autotuner-raced)
+# --------------------------------------------------------------------------
+
+
+def _context_bucket(kv_len: int) -> int:
+    """Next power of two — one autotune verdict per context bucket, not per
+    exact max_len."""
+    return 1 << max(int(kv_len) - 1, 1).bit_length()
+
+
+def _race_candidates(shapes, tokens, phase, dtype, interpret):
+    """[(label, thunk)] for the autotuner: both implementations over
+    synthetic operands at the real head-config/page geometry.  ``shapes``
+    carries ((KV, G, Dh), (page_size, max_pages)); ``tokens`` the context
+    bucket."""
+    (kv, g, dh), (ps, mp) = shapes
+    jdt = jnp.dtype(dtype)
+    b = 4                                           # representative pool
+    p = b * mp
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (b, kv, g, dh)).astype(jdt)
+    kp = jax.random.normal(ks[1], (p, ps, kv, dh)).astype(jdt)
+    vp = jax.random.normal(ks[2], (p, ps, kv, dh)).astype(jdt)
+    lens = jnp.minimum(jax.random.randint(ks[3], (b,), 1, tokens + 1),
+                       mp * ps).astype(jnp.int32)
+    table = (jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp))
+    bias = jnp.where(jnp.arange(mp * ps)[None, :] < lens[:, None],
+                     0.0, MASK_VALUE).astype(jnp.float32)
+
+    def xla_ref(q, kp, vp, table, lens, bias):
+        k = gather_pages(kp, table)
+        v = gather_pages(vp, table)
+        s = jnp.einsum("bkgd,bskd->bkgs", q, k) / math.sqrt(dh)
+        s = s + bias[:, None, None, :]
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        return jnp.einsum("bkgs,bskd->bkgd", w.astype(v.dtype), v)
+
+    flash = jax.jit(functools.partial(flash_decode_attention,
+                                      interpret=interpret))
+    xla = jax.jit(xla_ref)
+    return [("flash", lambda: flash(q, kp, vp, table, lens, bias)),
+            ("xla", lambda: xla(q, kp, vp, table, lens, bias))]
+
+
+def choose_impl(num_kv_heads: int, group: int, head_dim: int,
+                page_size: int, max_pages: int, dtype: str,
+                interpret: bool = True) -> str:
+    """"flash" or "xla", decided at trace time from static info only.
+
+    Priority: ``REPRO_DECODE_ATTN`` env force > measured autotuner race
+    (per head-config / context-bucket / dtype / backend, persisted next to
+    the MPO-linear verdicts) > analytic default (XLA reference in interpret
+    mode — the kernel interprets orders of magnitude slower than the
+    fallback; flash when compiled on real hardware)."""
+    forced = os.environ.get(ENV_IMPL)
+    if forced in ("flash", "xla"):
+        return forced
+    from repro.kernels import autotune  # lazy: no import cycle at module load
+    if autotune.should_measure(interpret):
+        shapes = ((num_kv_heads, group, head_dim), (page_size, max_pages))
+        bucket = _context_bucket(max_pages * page_size)
+        try:
+            res = autotune.get_tuner().get(
+                shapes, bucket, "decode_attn", dtype, interpret,
+                candidates_fn=_race_candidates)
+        except Exception:   # tuning must never take the decode step down
+            res = None
+        if res is not None and res.mode in ("flash", "xla"):
+            return res.mode
+    return "xla" if interpret else "flash"

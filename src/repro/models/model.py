@@ -48,8 +48,21 @@ def build(cfg: ModelConfig) -> Model:
            "ssm": mamba, "hybrid": zamba, "encdec": whisper}.get(fam)
     if mod is None:
         raise ValueError(f"unknown family {fam}")
-    init_cache = (lambda b, m: mamba.init_ssm_state(cfg, b)) if fam == "ssm" \
-        else (lambda b, m: mod.init_cache(cfg, b, m))
+    def init_cache(b, m, **kw):
+        # paged KV (kw: paged=, page_size=) exists for the transformer
+        # families only — SSM states and the hybrid/encdec caches have no
+        # per-slot KV sequence to page
+        if fam == "ssm":
+            if kw.get("paged"):
+                raise ValueError(
+                    "paged KV cache requires an attention KV cache; "
+                    f"family {fam!r} has none")
+            return mamba.init_ssm_state(cfg, b)
+        if fam not in ("dense", "moe", "vlm") and kw.get("paged"):
+            raise ValueError(
+                f"paged KV cache is not supported for family {fam!r}")
+        return mod.init_cache(cfg, b, m, **kw) \
+            if fam in ("dense", "moe", "vlm") else mod.init_cache(cfg, b, m)
     return Model(
         cfg=cfg,
         init=lambda key: mod.init(key, cfg),

@@ -150,16 +150,121 @@ def causal_mask(sq: int, sk: int, *, window: int | None = None,
     return m[None, None]
 
 
+def _paged_prefill_append(cache, k, v):
+    """Write a start-0 prompt's K/V into freshly allocated pages.
+
+    Prefill always begins at position 0 (its masks/positions assume it), so
+    allocation is a vectorized pop of ``ceil(s / ps)`` pages per slot off
+    the free-list stack.  Returns the updated paged-cache leaves."""
+    b, s = k.shape[0], k.shape[1]
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    table, fl, fc = cache["page_table"], cache["free_list"], cache["free_count"]
+    ps = kp.shape[1]
+    npg = -(-s // ps)                              # pages per slot (static)
+    pad = npg * ps - s
+    kq = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kp.dtype)
+    vq = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(vp.dtype)
+    kq = kq.reshape(b, npg, ps, *k.shape[2:])
+    vq = vq.reshape(b, npg, ps, *v.shape[2:])
+    pids = fl[fc - 1 - jnp.arange(b * npg)].reshape(b, npg)
+    kp = kp.at[pids.reshape(-1)].set(kq.reshape(b * npg, ps, *k.shape[2:]))
+    vp = vp.at[pids.reshape(-1)].set(vq.reshape(b * npg, ps, *v.shape[2:]))
+    table = table.at[:, :npg].set(pids)
+    return dict(cache, k_pages=kp, v_pages=vp, page_table=table,
+                free_count=fc - b * npg, pos=cache["pos"] + s)
+
+
+def _paged_decode_append(cache, k, v):
+    """Append one (KV, Dh) row per slot at its own position, allocating a
+    fresh page lazily when a slot crosses a page boundary.
+
+    Slots past capacity (the freed-slot sentinel, or an idle row that ran
+    off the end) neither allocate nor write — their scatter indices are
+    redirected out of bounds, which JAX drops."""
+    b = k.shape[0]
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    table, fl, fc = cache["page_table"], cache["free_list"], cache["free_count"]
+    pos = cache["pos"]                             # (B,)
+    p_total, ps = kp.shape[0], kp.shape[1]
+    mp = table.shape[1]
+    oob = pos >= mp * ps
+    lp = jnp.minimum(pos // ps, mp - 1)            # logical page (clamped)
+    off = pos % ps
+    need = (off == 0) & ~oob                       # page-boundary slots
+    # distinct stack entries per allocating slot: pool size is B * MP, so
+    # the stack can never underflow while any slot still has room
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    fresh = fl[fc - 1 - rank]
+    rows = jnp.arange(b)
+    table = jnp.where(need[:, None],
+                      table.at[rows, lp].set(fresh), table)
+    phys = table[rows, lp]                         # (B,) now mapped
+    phys_w = jnp.where(oob, p_total, phys)         # dropped when oob
+    off_w = jnp.where(oob, ps, off)
+    kp = kp.at[phys_w, off_w].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[phys_w, off_w].set(v[:, 0].astype(vp.dtype))
+    return dict(cache, k_pages=kp, v_pages=vp, page_table=table,
+                free_count=fc - jnp.sum(need.astype(jnp.int32)),
+                pos=pos + 1)
+
+
+def _paged_attention(params, q, k, v, cache, cfg: AttnCfg, mpo: MPOConfig,
+                     mask, phase: str):
+    """Self-attention over a paged KV cache (see ``transformer.init_cache``
+    ``paged=True``).  Prefill attends over the in-hand prompt K/V; decode
+    appends one row per slot and dispatches to the flash kernel or the
+    XLA gather fallback (``kernels.decode_attention.choose_impl``)."""
+    from repro.kernels import decode_attention as DA
+    from repro.kernels import ops
+    from repro.parallel.ctx import shard_dims
+    b, s = q.shape[0], q.shape[1]
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    if s > 1:                                      # prefill (start == 0)
+        new_cache = _paged_prefill_append(cache, k, v)
+        w = attention_scores(q, k, cfg, mask[..., :s])
+        y = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    else:                                          # single-token decode
+        new_cache = _paged_decode_append(cache, k, v)
+        kp, vp = new_cache["k_pages"], new_cache["v_pages"]
+        # pin the paged flash layout (in-page seq dim over model) so GSPMD
+        # never reshards the pool per layer — mirror of the dense pin below
+        kp = shard_dims(kp, {1: "model"})
+        vp = shard_dims(vp, {1: "model"})
+        new_cache = dict(new_cache, k_pages=kp, v_pages=vp)
+        table = new_cache["page_table"]
+        ps, mp = kp.shape[1], table.shape[1]
+        impl = DA.choose_impl(kvh, g, dh, ps, mp, str(q.dtype),
+                              interpret=ops.INTERPRET)
+        if impl == "flash":
+            lengths = jnp.minimum(new_cache["pos"], mp * ps).astype(jnp.int32)
+            bias = jnp.where(mask[:, 0, 0], 0.0, DA.MASK_VALUE
+                             ).astype(jnp.float32)
+            y = DA.flash_decode_attention(
+                q[:, 0].reshape(b, kvh, g, dh), kp, vp, table, lengths,
+                bias, softcap=cfg.attn_softcap, interpret=ops.INTERPRET)
+            y = y[:, None]                         # (B, 1, KV, G, Dh)
+        else:
+            kc = DA.gather_pages(kp, table)
+            vc = DA.gather_pages(vp, table)
+            w = attention_scores(q, kc, cfg, mask)
+            y = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(vc.dtype), vc)
+    y = y.reshape(b, s, h * dh)
+    return L.apply_linear(params["wo"], y, cfg=mpo, phase=phase), new_cache
+
+
 def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
                     positions, mask, kv_x=None, cache=None,
                     phase: str = "train"):
     """Returns (y, new_cache).
 
-    ``cache``: dict(k, v, pos) for incremental decode; ``kv_x`` for
-    cross-attention (ignores cache k/v writes when provided with cache —
-    cross k/v are precomputed in the cache by prefill).  ``phase`` feeds the
-    execution engine's per-matrix planning (train / prefill / decode).
-    """
+    ``cache``: dict(k, v, pos) for incremental decode — or the paged form
+    (k_pages / v_pages / page_table / free_list / free_count / pos, see
+    ``transformer.init_cache(paged=True)``), which appends into fixed-size
+    pages and dispatches decode to ``kernels.decode_attention``.  ``kv_x``
+    for cross-attention (ignores cache k/v writes when provided with
+    cache — cross k/v are precomputed in the cache by prefill).  ``phase``
+    feeds the execution engine's per-matrix planning."""
     b = x.shape[0]
     h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = _split_heads(L.apply_linear(params["wq"], x, cfg=mpo, phase=phase),
@@ -182,6 +287,9 @@ def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
         from repro.parallel.ctx import gather_seq
         k = gather_seq(k)
         v = gather_seq(v)
+    if cache is not None and kv_x is None and "k_pages" in cache:
+        return _paged_attention(params, q, k, v, cache, cfg, mpo, mask,
+                                phase)
     new_cache = None
     if cache is not None:
         if kv_x is None:  # self-attention decode: append to ring buffer

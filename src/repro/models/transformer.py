@@ -204,24 +204,57 @@ def forward_cls(params, batch, cfg: ModelConfig):
 # --------------------------------------------------------------------------
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
+               paged: bool = False, page_size: int = 16):
     """KV cache with PER-SLOT positions: ``pos`` is (layers, batch), so each
     batch row ("slot") can sit at its own decode offset — the substrate for
     multi-tenant batched decode (``pipeline.scheduler.ServePool``), where
     finished slots are recycled mid-generation without disturbing the
-    positions of live tenants."""
+    positions of live tenants.
+
+    ``paged=True`` swaps the dense ``(B, max_len)`` layout for a paged one
+    (vLLM-style): K/V live in a pool of fixed-size pages, each slot maps
+    logical pages to physical ones through its ``page_table`` row, and
+    pages are allocated lazily off a ``free_list`` stack as a slot's
+    context grows — so decode attention bandwidth scales with a slot's own
+    length (``kernels.decode_attention``), and ``ServePool`` returns a
+    finished slot's pages to the pool at recycle.  The pool holds
+    ``batch * ceil(max_len / page_size)`` pages (worst case every slot
+    full), so allocation can never exhaust it.  Every leaf keeps the
+    leading layers dim for the ``lax.scan`` over the stack."""
     dtype = dtype or cfg.jnp_dtype
     acfg = attn_cfg(cfg)
-    shape = (cfg.num_layers, batch, max_len, acfg.num_kv_heads, acfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            "pos": jnp.zeros((cfg.num_layers, batch), jnp.int32)}
+    nl = cfg.num_layers
+    if not paged:
+        shape = (nl, batch, max_len, acfg.num_kv_heads, acfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": jnp.zeros((nl, batch), jnp.int32)}
+    mp = -(-max_len // page_size)                 # logical pages per slot
+    pool = batch * mp                             # physical pages per layer
+    pshape = (nl, pool, page_size, acfg.num_kv_heads, acfg.head_dim)
+    return {
+        "k_pages": jnp.zeros(pshape, dtype),
+        "v_pages": jnp.zeros(pshape, dtype),
+        "page_table": jnp.full((nl, batch, mp), -1, jnp.int32),
+        "pos": jnp.zeros((nl, batch), jnp.int32),
+        "free_list": jnp.tile(jnp.arange(pool, dtype=jnp.int32), (nl, 1)),
+        "free_count": jnp.full((nl,), pool, jnp.int32),
+    }
+
+
+def cache_kv_len(cache) -> int:
+    """Key span the decode masks cover: ``max_len`` for dense caches, page
+    capacity (``MP * page_size``, >= max_len) for paged ones."""
+    if "k_pages" in cache:
+        return cache["page_table"].shape[-1] * cache["k_pages"].shape[2]
+    return cache["k"].shape[2]
 
 
 def prefill(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
     """Fill KV caches with the prompt; returns (last_logits, cache)."""
     x = _embed_inputs(cfg, params, batch, phase)
     s = x.shape[1]
-    max_len = cache["k"].shape[2]
+    max_len = cache_kv_len(cache)
     positions = jnp.arange(s)[None, :]
     mask = nn.causal_mask(s, max_len)
     mask_local = nn.causal_mask(s, max_len, window=cfg.local_window)
@@ -240,7 +273,7 @@ def decode_step(params, tokens, cache, cfg: ModelConfig, *, phase="decode"):
     position, so rows admitted at different times decode correctly side by
     side in one batched step."""
     x = _embed_inputs(cfg, params, {"tokens": tokens}, phase)
-    max_len = cache["k"].shape[2]
+    max_len = cache_kv_len(cache)
     pos = cache["pos"][0]                          # (B,) per-slot positions
     positions = pos[:, None]                       # (B, 1) for rope
     kj = jnp.arange(max_len)[None, :]

@@ -135,13 +135,35 @@ def batch_sharding(batch_specs, mesh: Mesh, rules: dict):
 def cache_sharding(cache_specs, mesh: Mesh, rules: dict):
     """Decode caches: batch dim is dim 1 (dim 0 = layers) for stacked caches,
     heads/kv dims sharded over model when divisible.  Integer leaves (the
-    per-slot ``pos`` counters, (layers, batch)) are tiny and stay
-    replicated — every device needs every slot's position for masking."""
+    per-slot ``pos`` counters, page tables, free lists) are tiny and stay
+    replicated — every device needs every slot's position for masking and
+    every page mapping for the gather.
+
+    Paged KV leaves (``k_pages``/``v_pages``: (L, pages, page_size, KV,
+    Dh)) get the paged flash layout: the in-page sequence dim over
+    ``model`` (the analog of the dense cache's seq-over-model), the
+    physical page dim UNsharded — pages are slot-agnostic, so splitting
+    the pool over data devices would turn every table-indexed gather into
+    cross-device traffic."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     b = rules["batch"]
     b = (b,) if isinstance(b, str) else b
     bprod = math.prod(sizes[a] for a in b)
     mprod = sizes.get("model", 1)
+
+    def paged_leaf(sd):
+        parts = [None] * len(sd.shape)
+        if sd.shape[2] % mprod == 0:
+            parts[2] = "model"
+        elif sd.shape[3] % mprod == 0:
+            parts[3] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    def one_with_path(path, sd):
+        name = str(getattr(path[-1], "key", "")) if path else ""
+        if name in ("k_pages", "v_pages"):
+            return paged_leaf(sd)
+        return one(sd)
 
     def one(sd):
         shape = sd.shape
@@ -166,7 +188,7 @@ def cache_sharding(cache_specs, mesh: Mesh, rules: dict):
                 parts[0] = b if len(b) > 1 else b[0]
         return NamedSharding(mesh, P(*parts))
 
-    return jax.tree.map(one, cache_specs)
+    return jax.tree_util.tree_map_with_path(one_with_path, cache_specs)
 
 
 def constrain(x, mesh: Mesh, rules: dict, names: tuple):

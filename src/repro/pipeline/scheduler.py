@@ -88,24 +88,34 @@ class ServePool:
 
     def __init__(self, model, params, slots: int, max_len: int, *,
                  weight_cache: bool = True, mesh=None, rules=None,
-                 axes=None, version: int = 0):
+                 axes=None, version: int = 0, paged: bool = False,
+                 page_size: int = 16):
         if model.cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"ServePool supports families {SUPPORTED_FAMILIES}; "
                 f"{model.cfg.family!r} decode still tracks one shared "
                 "position per cache segment (or needs a non-token frontend "
                 "at admission), so slots cannot sit at independent offsets")
+        if paged and model.cfg.family == "ssm":
+            raise ValueError("paged KV cache requires an attention KV "
+                             "cache; family 'ssm' has none")
         if slots < 1:
             raise ValueError(f"slots={slots} must be >= 1")
         self.slots, self.max_len = slots, max_len
         self.mesh = mesh
         self.version = version
+        self.paged, self.page_size = paged, page_size
         t0 = time.perf_counter()
         # pool-batch steps: one jitted decode over all slots
         prefill, self._decode, init_pool = make_serve_steps(
             model, weight_cache=weight_cache, mesh=mesh, rules=rules,
-            axes=axes)
+            axes=axes, paged=paged, page_size=page_size)
         self._sparams, self._cache = init_pool(params, slots, max_len)
+        if paged:
+            # park every slot at the capacity sentinel: idle rows neither
+            # write pages nor allocate from the shared pool until a tenant
+            # is adopted into them
+            self._cache = jax.jit(self._park_all)(self._cache)
         # Admission path: batch-1 prefill over the SAME weight snapshot —
         # serve params are batch-independent, so the pool never contracts
         # (or, under a mesh, places) a second copy of the weights.  Only a
@@ -113,15 +123,16 @@ class ServePool:
         # is pinned to the pool cache's shardings, so admission gets its
         # own jit; the committed placement of ``_sparams`` carries through
         # it without explicit in_shardings.
+        cache_kw = {"paged": True, "page_size": page_size} if paged else {}
         if mesh is None:
             self._decode = jax.jit(self._decode)
             self._prefill1 = jax.jit(prefill)
-            self._cache1_template = model.init_cache(1, max_len)
+            self._cache1_template = model.init_cache(1, max_len, **cache_kw)
         else:
             from repro.parallel import sharding as S
             from repro.parallel.ctx import maybe_mesh
             rules1 = S.make_rules(mesh) if rules is None else rules
-            cache1 = model.init_cache(1, max_len)
+            cache1 = model.init_cache(1, max_len, **cache_kw)
             cshard1 = S.cache_sharding(
                 jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
                              cache1), mesh, rules1)
@@ -136,7 +147,9 @@ class ServePool:
             self._prefill1 = prefill1
         self.init_seconds = time.perf_counter() - t0
 
-        self._adopt = jax.jit(self._adopt_fn)
+        self._adopt = jax.jit(self._adopt_paged_fn if paged
+                              else self._adopt_fn)
+        self._free = jax.jit(self._free_slot_fn) if paged else None
         self._requests: dict[int, Request] = {}
         self._queue: collections.deque[int] = collections.deque()
         self._slot_rid: list[int | None] = [None] * slots
@@ -161,6 +174,77 @@ class ServePool:
         def one(pc, oc):
             return pc.at[:, slot].set(oc[:, 0].astype(pc.dtype))
         return jax.tree.map(one, pool_cache, one_cache)
+
+    # ---- paged-cache slot management ----
+    #
+    # The paged pool (transformer.init_cache(paged=True)) shares one
+    # physical page pool across slots; slot state is the page-table row +
+    # position.  Adoption copies the tenant's batch-1 pages into freshly
+    # popped pool pages; recycling pushes a finished slot's pages back.
+    # Both are per-layer (vmapped over the leading layers dim) because each
+    # layer owns an independent free-list stack.
+
+    @staticmethod
+    def _park_all(cache):
+        """All slots idle: position at the capacity sentinel, so decode
+        writes drop and no pages are allocated for unoccupied rows."""
+        cap = cache["page_table"].shape[-1] * cache["k_pages"].shape[2]
+        return dict(cache, pos=jnp.full_like(cache["pos"], cap))
+
+    @staticmethod
+    def _adopt_paged_fn(pool_cache, one_cache, slot):
+        """Copy a batch-1 tenant cache into pool slot ``slot``: pop one
+        pool page per tenant page in use, copy the page data, and point the
+        slot's table row at the new physical pages."""
+        ps = pool_cache["k_pages"].shape[2]
+        p_total = pool_cache["k_pages"].shape[1]
+        mp = pool_cache["page_table"].shape[-1]
+
+        def layer(kp, vp, tbl, pos, fl, fc, kp1, vp1, tbl1, pos1):
+            n = pos1[0]                             # tenant context length
+            used = jnp.arange(mp) < (n + ps - 1) // ps
+            rank = jnp.cumsum(used.astype(jnp.int32)) - 1
+            pids = fl[fc - 1 - rank]                # popped pool pages
+            pids_w = jnp.where(used, pids, p_total)  # unused -> dropped
+            src = jnp.maximum(tbl1[0], 0)           # tenant physical pages
+            kp = kp.at[pids_w].set(kp1[src].astype(kp.dtype))
+            vp = vp.at[pids_w].set(vp1[src].astype(vp.dtype))
+            tbl = tbl.at[slot].set(jnp.where(used, pids, -1))
+            pos = pos.at[slot].set(n)
+            return (kp, vp, tbl, pos, fl,
+                    fc - jnp.sum(used.astype(jnp.int32)))
+
+        kp, vp, tbl, pos, fl, fc = jax.vmap(layer)(
+            pool_cache["k_pages"], pool_cache["v_pages"],
+            pool_cache["page_table"], pool_cache["pos"],
+            pool_cache["free_list"], pool_cache["free_count"],
+            one_cache["k_pages"], one_cache["v_pages"],
+            one_cache["page_table"], one_cache["pos"])
+        return dict(pool_cache, k_pages=kp, v_pages=vp, page_table=tbl,
+                    pos=pos, free_list=fl, free_count=fc)
+
+    @staticmethod
+    def _free_slot_fn(cache, slot):
+        """Recycle slot ``slot``: push its mapped pages back onto the free
+        list, clear the table row, park the position at the sentinel."""
+        p_total = cache["k_pages"].shape[1]
+        cap = cache["page_table"].shape[-1] * cache["k_pages"].shape[2]
+
+        def layer(tbl, pos, fl, fc):
+            row = tbl[slot]
+            valid = row >= 0
+            rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+            dest = jnp.where(valid, fc + rank, p_total)  # invalid -> dropped
+            fl = fl.at[dest].set(row)
+            tbl = tbl.at[slot].set(jnp.full_like(row, -1))
+            pos = pos.at[slot].set(cap)
+            return tbl, pos, fl, fc + jnp.sum(valid.astype(jnp.int32))
+
+        tbl, pos, fl, fc = jax.vmap(layer)(
+            cache["page_table"], cache["pos"],
+            cache["free_list"], cache["free_count"])
+        return dict(cache, page_table=tbl, pos=pos, free_list=fl,
+                    free_count=fc)
 
     def submit(self, prompt, max_new_tokens: int,
                eos_id: int | None = None) -> int:
@@ -261,6 +345,8 @@ class ServePool:
             if len(req.tokens) >= req.max_new_tokens or t == req.eos_id:
                 self._finish(req)
                 self._slot_rid[slot] = None   # recycled at next admission
+                if self.paged:                # pages back to the pool NOW
+                    self._cache = self._free(self._cache, jnp.int32(slot))
         self._live_slot_steps += advanced
         return advanced
 
@@ -280,7 +366,15 @@ class ServePool:
         step), aggregate tokens/s (prefill-admissions included in the
         denominator), and admission/completion totals."""
         busy = self._decode_seconds + self._admit_seconds
+        page_pool = None
+        if self.paged:
+            pages = int(self._cache["k_pages"].shape[1])
+            used = pages - int(jax.device_get(self._cache["free_count"][0]))
+            page_pool = {"pages": pages, "used": used,
+                         "page_size": self.page_size,
+                         "occupancy": used / pages}
         return {
+            "page_pool": page_pool,
             "slots": self.slots,
             "max_len": self.max_len,
             "mesh": None if self.mesh is None else

@@ -88,14 +88,16 @@ class ServeHandle:
 
     def __init__(self, model, params, batch_size: int, max_len: int, *,
                  weight_cache: bool = True, version: int = 0,
-                 mesh=None, rules=None, axes=None):
+                 mesh=None, rules=None, axes=None,
+                 paged: bool = False, page_size: int = 16):
         self.batch_size, self.max_len = batch_size, max_len
         self.weight_cache = weight_cache
         self.version = version
         self.mesh = mesh
+        self.paged = paged
         prefill_step, decode_step, init_serve = make_serve_steps(
             model, weight_cache=weight_cache, mesh=mesh, rules=rules,
-            axes=axes)
+            axes=axes, paged=paged, page_size=page_size)
         t0 = time.perf_counter()
         self.params, self._cache0 = jax.block_until_ready(
             init_serve(params, batch_size, max_len))
@@ -442,7 +444,8 @@ class Session:
 
     def serve(self, batch_size: int, max_len: int, *,
               weight_cache: bool = True, mesh=None,
-              rules: dict | None = None) -> ServeHandle:
+              rules: dict | None = None, paged: bool = False,
+              page_size: int = 16) -> ServeHandle:
         """Serving handle for the CURRENT weights.  The one-time
         ``init_serve`` (KV cache + cached-W contraction) runs only when no
         valid handle exists for this (batch, max_len, weight_cache, mesh)
@@ -469,14 +472,16 @@ class Session:
                 "— build it via Session.init/from_dense, or pass axes to "
                 "the constructor")
         rules_key = None if rules is None else tuple(sorted(rules.items()))
-        key = (batch_size, max_len, weight_cache, mesh, rules_key)
+        key = (batch_size, max_len, weight_cache, mesh, rules_key,
+               paged, page_size)
         h = self._serve.get(key)
         if h is not None:
             return h.reset()
         handle = ServeHandle(self.model, self.params, batch_size, max_len,
                              weight_cache=weight_cache,
                              version=self._version, mesh=mesh, rules=rules,
-                             axes=self.axes if mesh is not None else None)
+                             axes=self.axes if mesh is not None else None,
+                             paged=paged, page_size=page_size)
         self._serve[key] = handle
         self._record("serve", t0, {"batch": batch_size, "max_len": max_len,
                                    "weight_cache": weight_cache,
@@ -488,7 +493,8 @@ class Session:
 
     def serve_pool(self, slots: int, max_len: int, *,
                    weight_cache: bool = True, mesh=None,
-                   rules: dict | None = None):
+                   rules: dict | None = None, paged: bool = False,
+                   page_size: int = 16):
         """Multi-tenant batched decode over the CURRENT weights: a
         ``pipeline.scheduler.ServePool`` with ``slots`` decode rows.
         Independent requests are admitted into free slots (batch-1 prefill
@@ -514,7 +520,8 @@ class Session:
         pool = ServePool(self.model, self.params, slots, max_len,
                          weight_cache=weight_cache, mesh=mesh, rules=rules,
                          axes=self.axes if mesh is not None else None,
-                         version=self._version)
+                         version=self._version, paged=paged,
+                         page_size=page_size)
         self._pools = [r for r in self._pools if r() is not None]
         self._pools.append(weakref.ref(pool))
         self._record("serve", t0, {"pool": True, "slots": slots,

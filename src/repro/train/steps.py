@@ -109,8 +109,17 @@ def make_eval_step(model: Model, loss_fn: Callable | None = None):
 
 
 def make_serve_steps(model: Model, *, weight_cache: bool = True,
-                     mesh=None, rules: dict | None = None, axes=None):
+                     mesh=None, rules: dict | None = None, axes=None,
+                     paged: bool = False, page_size: int = 16):
     """(prefill_step, decode_step, init_serve) for batched serving.
+
+    ``paged=True`` allocates the PAGED KV cache
+    (``transformer.init_cache(paged=True, page_size=...)``): decode
+    attention then appends into fixed-size pages and routes through
+    ``kernels.decode_attention`` (flash kernel vs XLA gather, raced by the
+    measured autotuner) — see docs/serving.md "Decode attention & paged
+    KV".  The step functions themselves are unchanged; the cache pytree
+    carries the paging state.
 
     ``init_serve(params, batch, max_len)`` runs ONCE per serving session: it
     allocates the KV cache (per-slot positions — see
@@ -154,8 +163,10 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True,
         logits, cache = prefill(sparams, batch_inputs, cache)
     """
 
+    cache_kw = {"paged": True, "page_size": page_size} if paged else {}
+
     def init_serve(params, batch: int, max_len: int):
-        cache = model.init_cache(batch, max_len)
+        cache = model.init_cache(batch, max_len, **cache_kw)
         serve_params = model.cache_weights(params) if weight_cache else params
         return serve_params, cache
 
@@ -190,7 +201,7 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True,
     jitted: dict = {}
 
     def init_serve_mesh(params, batch: int, max_len: int):
-        cache = model.init_cache(batch, max_len)
+        cache = model.init_cache(batch, max_len, **cache_kw)
         if weight_cache:
             serve_params, serve_axes = model.cache_weights(params, axes=axes)
         else:

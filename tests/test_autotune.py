@@ -153,6 +153,31 @@ def test_measure_disable_env_wins(monkeypatch):
     assert not autotune.should_measure(interpret=False)
 
 
+def test_long_prefill_candidates_past_512(tuned_env):
+    """Carried-over ROADMAP gap: long-prefill shapes (4k+ tokens) must race
+    tile heights past 512, and a >512 disk verdict must round-trip into the
+    plan without a re-tune (i.e. the cache accepts the new candidates)."""
+    assert {1024, 2048} <= set(autotune.CANDIDATE_BLOCK_MS)
+    assert {1024, 2048} <= set(autotune._block_m_candidates(4096))
+    # short calls dedupe the tall tiles away by effective tile height
+    assert 2048 not in autotune._block_m_candidates(600)
+    assert autotune._parse_label("kernel@2048") == ("kernel", 2048)
+    # the cache key separates the long-prefill entry from the short one,
+    # so a 512-token verdict can never answer a 4096-token lookup
+    assert autotune.make_key(SHAPES, 4096, "prefill", "float32") != \
+        autotune.make_key(SHAPES, 512, "prefill", "float32")
+    key = autotune.make_key(SHAPES, 4096, "prefill", "float32")
+    with open(tuned_env, "w") as f:
+        json.dump({"version": autotune.CACHE_VERSION,
+                   "entries": {key: {"mode": "kernel", "block_m": 2048,
+                                     "timings": {"kernel@2048": 1e-6,
+                                                 "kernel@1024": 2e-6}}}}, f)
+    eng, tuner = _fresh_engine()
+    plan = eng.plan(SHAPES, 4096, "prefill")
+    assert (plan.mode, plan.block_m, plan.tuned) == ("kernel", 2048, True)
+    assert tuner.timing_runs == 0          # disk verdict accepted as-is
+
+
 def test_key_distinguishes_dtype_phase_and_substrate():
     k = autotune.make_key(SHAPES, TOKENS, "train", "float32")
     assert k != autotune.make_key(SHAPES, TOKENS, "train", "bfloat16")

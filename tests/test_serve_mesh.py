@@ -151,6 +151,44 @@ def test_mesh_pool_recycling_matches_serial():
     assert "MESH_POOL_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
 
 
+def test_mesh_pool_paged_matches_serial():
+    """Paged KV over the 8-device mesh: the pool decodes through the paged
+    cache (page data in the paged flash layout — in-page seq over model,
+    table/free-list leaves replicated) and still produces exactly the
+    serial batch-1 tokens, with every page returned on drain."""
+    code = _PRELUDE + """
+    s = Session.init("qwen3-14b")
+    mesh = make_host_mesh(model=4)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 500, size=p).astype(np.int32)
+               for p in (8, 5, 11)]
+    budgets = [6, 9, 7]
+    h1 = s.serve(1, 32)
+    serial = [np.asarray(h1.generate(
+        {"tokens": jnp.asarray(p)[None, :]}, n))[0]
+        for p, n in zip(prompts, budgets)]
+    pool = s.serve_pool(slots=2, max_len=32, mesh=mesh, paged=True,
+                        page_size=8)
+    rids = [pool.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, budgets)]
+    outs = pool.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(outs[rid], serial[i],
+                                      err_msg=f"request {i}")
+    st = pool.stats()
+    assert st["completed"] == 3 and st["page_pool"]["used"] == 0
+    # paged flash layout on the mesh: in-page seq dim over model, page
+    # table / free list / positions replicated
+    kp = pool._cache["k_pages"]
+    assert kp.sharding.spec == P(None, None, "model"), kp.sharding.spec
+    assert pool._cache["page_table"].sharding.spec == P()
+    assert pool._cache["free_list"].sharding.spec == P()
+    print("MESH_PAGED_OK")
+    """
+    r = _subproc(code)
+    assert "MESH_PAGED_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+
+
 def test_make_host_mesh_rejects_nondividing_model_axis():
     """(d): the clear error replaces mesh_utils' obscure failure."""
     import jax
