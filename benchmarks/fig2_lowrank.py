@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import mpo
 
@@ -19,7 +18,6 @@ def cp_als(t4: jnp.ndarray, rank: int, iters: int = 30, seed: int = 0):
     key = jax.random.PRNGKey(seed)
     factors = [0.1 * jax.random.normal(k, (d, rank))
                for k, d in zip(jax.random.split(key, 4), dims)]
-    letters = "abcd"
 
     def khatri(mats):
         out = mats[0]

@@ -5,7 +5,6 @@ useful-FLOPs ratio, roofline fraction)."""
 from __future__ import annotations
 
 import json
-import sys
 
 from repro.launch.roofline import roofline
 

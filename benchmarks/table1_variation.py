@@ -9,9 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.models import model as M
 from benchmarks.common import finetune_cls
+from repro import configs
 
 
 BUCKETS = [(0, 1e-4), (1e-4, 1e-3), (1e-3, np.inf)]
@@ -28,7 +27,6 @@ def run() -> list[str]:
     cfg = configs.smoke_config("bert-base", num_classes=2)
     cfg = dataclasses.replace(
         cfg, mpo=dataclasses.replace(cfg.mpo, enabled=False))  # dense BERT
-    model = M.build(cfg)
     # paper setting: fine-tune a PRE-TRAINED model (low LR, few steps) and
     # measure how little the parameters move.  "Pre-train" on the task
     # first, then fine-tune from that checkpoint on a reseeded task split.

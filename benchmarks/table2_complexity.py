@@ -10,12 +10,11 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import mpo
-from repro.core import layers as L
-from repro.core.engine import engine_for, flops_factorized_per_token
 from benchmarks.common import time_call
+from repro.core import layers as L
+from repro.core import mpo
+from repro.core.engine import engine_for, flops_factorized_per_token
 
 I, J, BOND, B = 1024, 1024, 16, 64
 

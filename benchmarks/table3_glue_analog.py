@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import lightweight
 from benchmarks.common import cls_config, cls_session, finetune_cls
+from repro.core import lightweight
 
 STEPS = 70
 

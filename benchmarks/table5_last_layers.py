@@ -7,9 +7,9 @@ from __future__ import annotations
 
 import jax
 
+from benchmarks.common import cls_config, finetune_cls
 from repro import Session
 from repro.core import lightweight
-from benchmarks.common import cls_config, finetune_cls
 
 STEPS = 60
 

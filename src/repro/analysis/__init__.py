@@ -1,0 +1,44 @@
+"""Static correctness analysis — prove placement/trace/kernel invariants
+before anything executes.
+
+Three detector families, all runnable on a devices-free CPU container:
+
+``sharding_lint``   rule coverage, divisibility fallbacks made loud, the
+                    ``head_safe_rules`` invariant, and the small-leaf
+                    placement rule (the PR 4 bug class) — checked against
+                    abstract mesh shapes (no real devices needed).
+``trace_lint``      prefill/decode/train traced to jaxpr once; retrace
+                    hazards (weak types, closure constants, dtype drift
+                    between phases), host transfers, and the decode-cache
+                    donation precondition.  Reuses ``launch.hlo_analysis``
+                    when compiled HLO text is available.
+``kernel_budget``   worst-case VMEM residency per Pallas program (from the
+                    ``vmem_buffers`` models kept next to the kernels'
+                    BlockSpecs), tile-alignment rules, and page-table
+                    index-map bounds.
+
+The ``repro-lint`` console script (``analysis.cli``) sweeps every in-tree
+config at 1/4/8-device mesh shapes and exits nonzero on findings not
+suppressed by a ``--baseline`` file; ``Session.report()["analysis"]``
+surfaces the same sharding/kernel summary for a live session.
+"""
+
+from repro.analysis.findings import (Finding, format_findings, load_baseline,
+                                     new_findings, save_baseline, summarize)
+from repro.analysis.kernel_budget import (DEFAULT_VMEM_BUDGET,
+                                          lint_decode_attention_call,
+                                          lint_kernels, lint_mpo_call)
+from repro.analysis.session import session_summary
+from repro.analysis.sharding_lint import (DEFAULT_MESHES, MeshSpec,
+                                          lint_sharding)
+from repro.analysis.trace_lint import lint_traces
+
+__all__ = [
+    "Finding", "format_findings", "summarize",
+    "load_baseline", "save_baseline", "new_findings",
+    "MeshSpec", "DEFAULT_MESHES", "lint_sharding",
+    "lint_traces",
+    "DEFAULT_VMEM_BUDGET", "lint_kernels", "lint_mpo_call",
+    "lint_decode_attention_call",
+    "session_summary",
+]

@@ -1,0 +1,159 @@
+"""``repro-lint`` — sweep every in-tree config through the static analyzer.
+
+    repro-lint                      # all configs, 1/4/8-device meshes
+    repro-lint --configs qwen3-14b --families sharding,kernel
+    repro-lint --write-baseline lint_baseline.json
+    repro-lint --baseline lint_baseline.json    # fail only on NEW findings
+
+Exit code 1 iff any finding at/above ``--fail-on`` (default: error) is not
+suppressed by the baseline file.  The autotune disk cache's measurement
+substrates (backend / interpret flag / JAX version, all part of the cache
+key) are surfaced as info findings so CPU-interpret bring-up verdicts are
+distinguishable from real-hardware ones at a glance."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import findings as F
+from repro.analysis.kernel_budget import DEFAULT_VMEM_BUDGET, lint_kernels
+from repro.analysis.sharding_lint import MeshSpec, lint_sharding
+from repro.analysis.trace_lint import lint_traces
+
+DEFAULT_MESH_ARG = "1x1,1x4,2x4"
+
+
+def _parse_meshes(arg: str) -> list:
+    out = []
+    for part in arg.split(","):
+        data, model = part.lower().split("x")
+        out.append(MeshSpec({"data": int(data), "model": int(model)}))
+    return out
+
+
+def autotune_findings() -> list:
+    """Info findings describing every measurement substrate present in the
+    autotune disk cache — interpret/CPU bring-up verdicts and verdicts from
+    other JAX versions must be visibly distinct from real ones."""
+    import jax
+
+    from repro.kernels import autotune
+    entries = autotune._read_cache(autotune.cache_path())
+    groups: dict[tuple, int] = {}
+    for key in entries:
+        fields = dict(f.split("=", 1) for f in key.split("|") if "=" in f)
+        sub = (fields.get("backend", "?"), fields.get("jax", "?"),
+               fields.get("interpret", "?"))
+        groups[sub] = groups.get(sub, 0) + 1
+    out = []
+    for (backend, jver, interp), count in sorted(groups.items()):
+        tags = []
+        if interp == "1" or backend != "tpu":
+            tags.append("CPU/interpret-measured — bring-up only, rankings "
+                        "do not transfer to TPU")
+        if jver != jax.__version__:
+            tags.append(f"measured under JAX {jver}, current is "
+                        f"{jax.__version__} — will not answer lookups")
+        msg = (f"{count} cached verdict(s) measured on backend={backend}, "
+               f"jax={jver}, interpret={interp}")
+        if tags:
+            msg += " [" + "; ".join(tags) + "]"
+        out.append(F.Finding(
+            check="autotune/substrate", severity="info",
+            file="src/repro/kernels/autotune.py",
+            location=f"backend={backend},jax={jver},interpret={interp}",
+            message=msg))
+    return out
+
+
+def run_lint(archs, meshes, families, *, hlo=False,
+             vmem_budget=DEFAULT_VMEM_BUDGET, progress=None) -> list:
+    from repro import configs
+    findings = []
+    for arch in archs:
+        cfg = configs.get_config(arch)
+        if progress:
+            progress(f"linting {arch} ({cfg.family})")
+        if "sharding" in families:
+            for mesh in meshes:
+                findings += lint_sharding(cfg, mesh)
+        if "kernel" in families:
+            findings += lint_kernels(cfg, budget=vmem_budget)
+        if "trace" in families:
+            findings += lint_traces(cfg, hlo=hlo)
+    findings += autotune_findings()
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="static correctness analyzer: sharding placement, "
+                    "trace hazards, Pallas kernel budgets")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated arch names (default: all in-tree)")
+    ap.add_argument("--meshes", default=DEFAULT_MESH_ARG,
+                    help="comma-separated DATAxMODEL mesh shapes "
+                         f"(default: {DEFAULT_MESH_ARG})")
+    ap.add_argument("--families", default="sharding,kernel,trace",
+                    help="detector families to run")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also compile the decode step and attach "
+                         "hlo_analysis info findings")
+    ap.add_argument("--vmem-budget", type=int, default=DEFAULT_VMEM_BUDGET)
+    ap.add_argument("--baseline", default=None,
+                    help="suppression file: fail only on findings not in it")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="record current findings as the baseline and exit 0")
+    ap.add_argument("--fail-on", choices=["error", "warning"],
+                    default="error")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro import configs
+    archs = (args.configs.split(",") if args.configs
+             else sorted(configs.ARCHS))
+    meshes = _parse_meshes(args.meshes)
+    families = set(args.families.split(","))
+    progress = None if (args.quiet or args.as_json) else \
+        (lambda msg: print(f"# {msg}", file=sys.stderr))
+
+    findings = run_lint(archs, meshes, families, hlo=args.hlo,
+                        vmem_budget=args.vmem_budget, progress=progress)
+
+    if args.write_baseline:
+        F.save_baseline(args.write_baseline, findings)
+        print(f"# wrote {len(findings)} fingerprint(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    baseline = F.load_baseline(args.baseline) if args.baseline else set()
+    fresh = F.new_findings(findings, baseline)
+    summary = F.summarize(findings)
+    summary["suppressed"] = len(findings) - len(fresh)
+
+    if args.as_json:
+        payload = {"summary": summary,
+                   "findings": [vars(f) | {"fingerprint": f.fingerprint,
+                                           "new": f in fresh}
+                                for f in findings]}
+        print(json.dumps(payload, indent=1, sort_keys=True))
+    else:
+        if findings:
+            print(F.format_findings(findings))
+        print(f"# repro-lint: {summary['errors']} error(s), "
+              f"{summary['warnings']} warning(s), {summary['info']} info "
+              f"across {len(archs)} config(s) x {len(meshes)} mesh(es)"
+              + (f"; {summary['suppressed']} baseline-suppressed"
+                 if baseline else ""))
+
+    gate = ("error",) if args.fail_on == "error" else ("error", "warning")
+    return 1 if any(f.severity in gate for f in fresh) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

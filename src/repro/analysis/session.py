@@ -1,0 +1,35 @@
+"""Session-facing summary: the cheap detector families over live state.
+
+``Session.report()["analysis"]`` calls this with the session's actual
+params/axes trees (no re-init, no tracing): sharding placement is linted at
+the default abstract mesh sweep and the kernel budgets at the session's
+core shapes.  The trace linter is NOT run here — it costs full traces and
+belongs to ``repro-lint``/CI, not a report call."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.findings import summarize
+from repro.analysis.kernel_budget import lint_kernels
+from repro.analysis.sharding_lint import (DEFAULT_MESHES, abstract_params,
+                                          lint_sharding)
+
+
+def session_summary(cfg, params=None, axes=None, meshes=DEFAULT_MESHES,
+                    *, max_findings: int = 8) -> dict:
+    """Findings summary dict (counts by severity/check + first few
+    formatted findings)."""
+    if params is not None and axes is not None:
+        shapes = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), params)
+    else:
+        shapes, axes = abstract_params(cfg)
+    findings = []
+    for mesh in meshes:
+        findings += lint_sharding(cfg, mesh, shapes=shapes, axes=axes)
+    findings += lint_kernels(cfg, shapes_tree=shapes)
+    out = summarize(findings)
+    out["meshes"] = [m.describe() for m in meshes]
+    out["findings"] = [f.format() for f in findings[:max_findings]]
+    return out

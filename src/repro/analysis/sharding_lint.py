@@ -1,0 +1,170 @@
+"""Sharding/placement linter — the PR 4 bug class as a static check.
+
+Works entirely on abstract values: parameter shapes come from
+``jax.eval_shape(model.init, ...)`` (no allocation) and meshes are
+``MeshSpec`` stand-ins exposing only ``axis_names`` / ``devices.shape`` —
+exactly the surface ``parallel.sharding`` reads — so a 1-device CPU
+container lints 4- and 8-device placements.
+
+Checks, per (config, mesh):
+
+``sharding/coverage``      every logical axis name carried by any leaf must
+                           be a key of the rule table (an unknown name is a
+                           typo that silently replicates).
+``sharding/divisibility``  ``spec_for``'s silent indivisible-dim fallback
+                           made loud (warning: the fallback is *designed*
+                           behavior, but every instance should be known).
+``sharding/head-safety``   the ``head_safe_rules`` invariant: a flattened
+                           attention projection whose head count doesn't
+                           divide the model-axis product must be replicated
+                           — sharding it splits ``head_dim`` across devices
+                           and produces numerically wrong GSPMD output.
+``sharding/small-leaf``    1-D leaves smaller than ``d_model`` (norm/scale
+                           vectors) must never resolve to a sharded spec —
+                           the data-sharded qk-norm-scale bug.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from collections import namedtuple
+
+import jax
+
+from repro.analysis.findings import Finding
+from repro.parallel import sharding as S
+
+SHARDING_FILE = "src/repro/parallel/sharding.py"
+
+_Devices = namedtuple("_Devices", ["shape", "size"])
+
+
+class MeshSpec:
+    """Duck-typed stand-in for ``jax.sharding.Mesh`` with no devices behind
+    it — only the two attributes the rule/spec machinery reads."""
+
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        shape = tuple(int(v) for v in sizes.values())
+        self.devices = _Devices(shape, math.prod(shape))
+
+    @property
+    def sizes(self) -> dict:
+        return dict(zip(self.axis_names, self.devices.shape))
+
+    def describe(self) -> str:
+        return ",".join(f"{n}={s}" for n, s in self.sizes.items())
+
+    def __repr__(self):
+        return f"MeshSpec({self.describe()})"
+
+
+# the CLI's default sweep: single device, one 4-device TP group, and the
+# 8-device data×model mesh the CPU-mesh test group serves on
+DEFAULT_MESHES = (MeshSpec({"data": 1, "model": 1}),
+                  MeshSpec({"data": 1, "model": 4}),
+                  MeshSpec({"data": 2, "model": 4}))
+
+
+@functools.lru_cache(maxsize=64)
+def abstract_params(cfg):
+    """(shape tree of ShapeDtypeStructs, axes tree) — no allocation."""
+    from repro.core.layers import split_annotations
+    from repro.models import model as M
+    model = M.build(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return split_annotations(tree)
+
+
+def production_rules(cfg, mesh) -> dict:
+    """The rule table serving/dry-run actually applies (head-safe)."""
+    return S.head_safe_rules(
+        S.make_rules(mesh, sp=cfg.parallelism == "sp"), cfg, mesh)
+
+
+def _leaf_items(shapes, axes):
+    """[(path str, ShapeDtypeStruct, axes tuple | None), ...]."""
+    is_tup = lambda x: x is None or isinstance(x, tuple)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    axes_flat = jax.tree_util.tree_leaves(axes, is_leaf=is_tup)
+    out = []
+    for (path, sd), ax in zip(flat, axes_flat):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, sd, ax))
+    return out
+
+
+def _axis_prod(rules: dict, name: str, sizes: dict) -> int:
+    ax = rules.get(name)
+    if ax is None:
+        return 1
+    ax = (ax,) if isinstance(ax, str) else ax
+    return math.prod(sizes[a] for a in ax if a in sizes)
+
+
+def lint_sharding(cfg, mesh, *, rules=None, shapes=None, axes=None) -> list:
+    """Findings for one (config, mesh, rule table).
+
+    ``rules`` defaults to the production (head-safe) table — the clean
+    path.  Tests seed the PR 4 violation by passing the raw
+    ``make_rules`` output instead.  ``shapes``/``axes`` default to the
+    abstract ``model.init`` tree."""
+    if shapes is None or axes is None:
+        shapes, axes = abstract_params(cfg)
+    if rules is None:
+        rules = production_rules(cfg, mesh)
+    sizes = S.mesh_axis_sizes(mesh)
+    meshstr = mesh.describe() if hasattr(mesh, "describe") else \
+        ",".join(f"{n}={s}" for n, s in sizes.items())
+    findings = []
+
+    def add(check, severity, location, message):
+        findings.append(Finding(check=check, severity=severity,
+                                file=SHARDING_FILE, location=location,
+                                message=message, config=cfg.name,
+                                mesh=meshstr))
+
+    # ---- head-safety: the rule table itself must respect head counts ----
+    for rule_name, heads, label in (
+            ("qkv", cfg.num_heads, "num_heads"),
+            ("kv_qkv", cfg.num_kv_heads, "num_kv_heads")):
+        prod = _axis_prod(rules, rule_name, sizes)
+        if prod > 1 and heads % prod != 0:
+            add("sharding/head-safety", "error", f"rules[{rule_name!r}]",
+                f"{label}={heads} does not divide the model-axis product "
+                f"{prod}: sharding the flattened projection splits head_dim "
+                f"across devices (numerically wrong under GSPMD). "
+                f"Apply head_safe_rules / replicate this projection.")
+
+    # ---- per-leaf checks ----
+    seen_missing = set()
+    for path, sd, ax in _leaf_items(shapes, axes):
+        if ax is None:
+            continue
+        for name in ax:
+            if name is not None and name not in rules \
+                    and name not in seen_missing:
+                seen_missing.add(name)
+                add("sharding/coverage", "error", path,
+                    f"logical axis {name!r} is not covered by the rule "
+                    f"table — it silently replicates; add a rule (or an "
+                    f"explicit None) to make_rules")
+        resolved = S.resolve_dims(ax, sd.shape, rules, sizes)
+        for dim_idx, ((_, reason), name) in enumerate(zip(resolved, ax)):
+            if reason == "indivisible":
+                prod = _axis_prod(rules, name, sizes)
+                add("sharding/divisibility", "warning",
+                    f"{path}[dim {dim_idx}]",
+                    f"dim size {sd.shape[dim_idx]} (axis {name!r}) does not "
+                    f"divide mesh product {prod}; spec_for falls back to "
+                    f"replication for this dim")
+        if len(sd.shape) == 1 and sd.shape[0] < cfg.d_model \
+                and any(r == "sharded" for _, r in resolved):
+            add("sharding/small-leaf", "error", path,
+                f"1-D leaf of size {sd.shape[0]} (< d_model={cfg.d_model}) "
+                f"resolves to a sharded spec via axis {ax[0]!r} — "
+                f"small norm/scale vectors must stay replicated "
+                f"(the data-sharded qk-norm-scale bug)")
+    return findings

@@ -1,0 +1,232 @@
+"""Trace-hazard linter — prefill/decode/train traced to jaxpr, once.
+
+All tracing is abstract (``jax.eval_shape`` / ``jax.make_jaxpr`` over
+``ShapeDtypeStruct``s): nothing executes, no device buffers are allocated,
+so the linter runs the REAL config (production dtypes, head counts) at a
+deliberately small sequence length — trace hazards are shape-independent,
+and small shapes keep closure constants (rope tables etc.) tiny.
+
+Checks, per config:
+
+``trace/cache-drift``       the decode hot loop must be a fixed point of
+                            its cache: every output cache leaf must match
+                            the input leaf in shape+dtype+weak_type.  A
+                            drifting leaf breaks buffer donation AND
+                            forces a retrace when the drifted cache is fed
+                            back (error).
+``trace/weak-type``         weak-typed step outputs: feeding one back next
+                            iteration retraces against a strong-typed
+                            tracer (warning).
+``trace/closure-constant``  device-resident constants closed over by the
+                            step (rope tables, masks baked at trace time):
+                            above a byte threshold they re-upload on every
+                            retrace (warning); Python scalars traced in as
+                            weak constants promote silently (info).
+``trace/host-transfer``     ``device_put`` primitives inside the step —
+                            host→device traffic in a hot loop (warning).
+``trace/phase-drift``       prefill and decode logits disagree on dtype —
+                            the phases would hit different compiled
+                            artifacts for consumers downstream (warning).
+``trace/hlo``               optional (``hlo=True``): compile the decode
+                            step for the local backend and reuse
+                            ``launch.hlo_analysis`` — op histogram and
+                            collective bytes attached as info.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.configs.base import ShapeConfig
+
+MODEL_FILE = "src/repro/models/model.py"
+
+# small trace shapes: real config, tiny sequence (see module docstring)
+def trace_shapes(cfg) -> dict:
+    """Per-config trace shapes: vlm sequences must cover the patch-token
+    prefix (``frontend_len``) plus some text."""
+    seq = 64
+    if cfg.family == "vlm":
+        seq += cfg.frontend_len
+    return {
+        "train": ShapeConfig("lint_train", "train", seq, 2),
+        "prefill": ShapeConfig("lint_prefill", "prefill", seq, 2),
+        "decode": ShapeConfig("lint_decode", "decode", seq + 64, 2),
+    }
+
+
+CONST_BYTES_THRESHOLD = 1 << 20  # 1 MiB of closed-over constants
+
+
+def _paths_with_leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path), leaf
+
+
+def cache_drift_findings(cache_in, cache_out, *, config: str,
+                         phase: str = "decode") -> list:
+    """The donation precondition, leaf by leaf (public for seeding tests)."""
+    findings = []
+    ins = dict(_paths_with_leaves(cache_in))
+    outs = dict(_paths_with_leaves(cache_out))
+    for path in sorted(set(ins) | set(outs)):
+        a, b = ins.get(path), outs.get(path)
+        if a is None or b is None:
+            findings.append(Finding(
+                check="trace/cache-drift", severity="error", file=MODEL_FILE,
+                location=f"{phase}:cache/{path}",
+                message="cache leaf appears on only one side of the step — "
+                        "the loop state is not a fixed point", config=config))
+            continue
+        same_weak = bool(getattr(a, "weak_type", False)) == \
+            bool(getattr(b, "weak_type", False))
+        if a.shape != b.shape or a.dtype != b.dtype or not same_weak:
+            findings.append(Finding(
+                check="trace/cache-drift", severity="error", file=MODEL_FILE,
+                location=f"{phase}:cache/{path}",
+                message=f"cache leaf drifts across the step: "
+                        f"{a.shape}/{a.dtype}{'w' if getattr(a, 'weak_type', False) else ''}"
+                        f" -> {b.shape}/{b.dtype}"
+                        f"{'w' if getattr(b, 'weak_type', False) else ''} — "
+                        f"breaks donation and retraces when fed back",
+                config=config))
+    return findings
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: hasattr(x, "jaxpr")
+                    or hasattr(x, "eqns")):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    yield from _iter_eqns(inner)
+
+
+def jaxpr_findings(closed, *, config: str, phase: str) -> list:
+    """Weak-type / closure-constant / host-transfer hazards of one traced
+    step (``closed`` from ``jax.make_jaxpr``)."""
+    findings = []
+    for i, var in enumerate(closed.jaxpr.outvars):
+        aval = var.aval
+        if getattr(aval, "weak_type", False):
+            findings.append(Finding(
+                check="trace/weak-type", severity="warning", file=MODEL_FILE,
+                location=f"{phase}:output[{i}]",
+                message=f"step output {i} ({aval.dtype}) is weak-typed: "
+                        f"feeding it back retraces against a strong-typed "
+                        f"tracer and may promote dtypes", config=config))
+    big, scalars, total = 0, 0, 0
+    for const in closed.consts:
+        nbytes = int(np.size(const)) * np.dtype(
+            getattr(const, "dtype", np.float32)).itemsize
+        total += nbytes
+        if nbytes >= CONST_BYTES_THRESHOLD:
+            big += 1
+        if np.ndim(const) == 0 and getattr(const, "weak_type", False):
+            scalars += 1
+    if big:
+        findings.append(Finding(
+            check="trace/closure-constant", severity="warning",
+            file=MODEL_FILE, location=f"{phase}:consts",
+            message=f"{big} closed-over constant(s) >= "
+                    f"{CONST_BYTES_THRESHOLD} B ({total} B total) are baked "
+                    f"into the trace — re-uploaded on every retrace; thread "
+                    f"them as arguments", config=config))
+    if scalars:
+        findings.append(Finding(
+            check="trace/closure-constant", severity="info", file=MODEL_FILE,
+            location=f"{phase}:consts",
+            message=f"{scalars} weak-typed Python scalar(s) closed over as "
+                    f"trace constants — silent promotion risk",
+            config=config))
+    transfers = sum(1 for eqn in _iter_eqns(closed.jaxpr)
+                    if eqn.primitive.name == "device_put")
+    if transfers:
+        findings.append(Finding(
+            check="trace/host-transfer", severity="warning", file=MODEL_FILE,
+            location=f"{phase}:jaxpr",
+            message=f"{transfers} device_put op(s) inside the step — "
+                    f"host→device transfer in a hot loop", config=config))
+    return findings
+
+
+def _hlo_findings(fn, args, *, config: str, phase: str) -> list:
+    """Compile for the local backend and reuse launch.hlo_analysis — op
+    histogram + collective bytes as info.  Best-effort: compile failures
+    (no backend, unsupported op) are not lint findings."""
+    from repro.launch.hlo_analysis import HloModule
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        mod = HloModule(compiled.as_text())
+        hist = mod.op_histogram()
+        coll = {k: v for k, v in mod.collective_bytes().items() if v}
+        hot = sorted(hist.items(), key=lambda kv: -kv[1])[:5]
+        msg = "top ops: " + ", ".join(f"{k}x{int(v)}" for k, v in hot)
+        if coll:
+            msg += "; collective bytes: " + ", ".join(
+                f"{k}={int(v)}" for k, v in coll.items())
+        return [Finding(check="trace/hlo", severity="info", file=MODEL_FILE,
+                        location=f"{phase}:hlo", message=msg, config=config)]
+    except Exception:
+        return []
+
+
+def lint_traces(cfg, *, hlo: bool = False) -> list:
+    """Trace prefill/decode/train once each and run every hazard check."""
+    from repro.analysis.sharding_lint import abstract_params
+    from repro.models import model as M
+    shapes = trace_shapes(cfg)
+    # loss chunking needs seq_len % loss_chunk == 0 at full scale; the tiny
+    # trace shapes below sidestep it
+    if cfg.loss_chunk and shapes["train"].seq_len % cfg.loss_chunk:
+        cfg = dataclasses.replace(cfg, loss_chunk=0)
+    model = M.build(cfg)
+    params, _ = abstract_params(cfg)
+    findings = []
+    logits_dtype = {}
+
+    dshape = shapes["decode"]
+    cache = M.cache_specs(cfg, dshape)
+    dtok = M.input_specs(cfg, dshape)["tokens"]
+    dec_out = jax.eval_shape(model.decode_step, params, dtok, cache)
+    findings += cache_drift_findings(cache, dec_out[-1], config=cfg.name)
+    logits_dtype["decode"] = dec_out[0].dtype
+    closed = jax.make_jaxpr(model.decode_step)(params, dtok, cache)
+    findings += jaxpr_findings(closed, config=cfg.name, phase="decode")
+
+    pshape = shapes["prefill"]
+    pin = M.input_specs(cfg, pshape)
+    pcache = M.cache_specs(cfg, pshape)
+    pf_out = jax.eval_shape(model.prefill, params, pin, pcache)
+    logits_dtype["prefill"] = pf_out[0].dtype
+    closed = jax.make_jaxpr(model.prefill)(params, pin, pcache)
+    findings += jaxpr_findings(closed, config=cfg.name, phase="prefill")
+
+    tshape = shapes["train"]
+    tin = M.input_specs(cfg, tshape)
+    from repro.train.steps import lm_loss
+    closed = jax.make_jaxpr(
+        lambda p, b: lm_loss(model, p, b))(params, tin)
+    findings += jaxpr_findings(closed, config=cfg.name, phase="train")
+
+    if logits_dtype["prefill"] != logits_dtype["decode"]:
+        findings.append(Finding(
+            check="trace/phase-drift", severity="warning", file=MODEL_FILE,
+            location="prefill-vs-decode:logits",
+            message=f"logits dtype differs between phases: "
+                    f"prefill={logits_dtype['prefill']} "
+                    f"decode={logits_dtype['decode']}", config=cfg.name))
+
+    if hlo:
+        findings += _hlo_findings(model.decode_step, (params, dtok, cache),
+                                  config=cfg.name, phase="decode")
+    return findings

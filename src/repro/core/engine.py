@@ -202,10 +202,8 @@ def _decide(cfg, shapes: tuple, tokens: int, phase: str, interpret: bool,
     # on-chip, so no dense dW traffic disqualifies it.  train's dL/dx pass
     # runs the kernel over i/j-SWAPPED cores, so both tile orientations must
     # clear the alignment floor.
-    eligible = kernel_eligible(shapes, DEFAULT_BLOCK_M)
-    if phase == "train":
-        transposed = tuple((d0, j, i, d1) for (d0, i, j, d1) in shapes)
-        eligible = eligible and kernel_eligible(transposed, DEFAULT_BLOCK_M)
+    eligible = kernel_eligible(shapes, DEFAULT_BLOCK_M,
+                               train=phase == "train")
     if not interpret and eligible:
         what = "fwd+bwd" if phase == "train" else "forward-only"
         return "kernel", DEFAULT_BLOCK_M, False, (

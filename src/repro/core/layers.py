@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

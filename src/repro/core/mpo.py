@@ -22,7 +22,6 @@ is decomposed into ``n`` 4-order cores ``T_k[d_{k-1}, i_k, j_k, d_k]`` with
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Sequence
 
@@ -241,7 +240,6 @@ def apply_mpo(cores: Sequence[jax.Array], x: jax.Array,
     ``(Beff*rest, d0*ik) x (d0*ik, jk*d1)`` — MXU-friendly when bonds are
     reasonably sized.
     """
-    ins = [c.shape[1] for c in cores]
     outs = [c.shape[2] for c in cores]
     lead = x.shape[:-1]
     b = math.prod(lead) if lead else 1

@@ -46,7 +46,9 @@ from repro.kernels.mpo_linear import (BLOCK_M_ALIGN, DEFAULT_BLOCK_M,
 ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
 ENV_MEASURE = "REPRO_AUTOTUNE_MEASURE"
 
-CACHE_VERSION = 1
+# v2: keys gained a jax=<version> field — pre-upgrade verdicts are dropped
+# wholesale instead of silently answering post-upgrade lookups.
+CACHE_VERSION = 2
 # the "small candidate grid" of tile heights; candidates collapse to one
 # entry when the token count caps the effective tile anyway.  1024/2048
 # exist for long-prefill shapes (4k+ token calls) where a 512 tile leaves
@@ -82,10 +84,13 @@ def should_measure(interpret: bool) -> bool:
 def make_key(shapes: Sequence[tuple], tokens: int, phase: str, dtype: str,
              interpret: bool = True) -> str:
     """Cache key.  Includes the measurement substrate (backend + interpret
-    flag): a CPU-interpret bring-up verdict must never be served to a real
-    TPU session — the rankings mean nothing across substrates."""
+    flag + JAX version): a CPU-interpret bring-up verdict must never be
+    served to a real TPU session, and a verdict measured under an older JAX
+    must never silently answer lookups after an upgrade — compiler changes
+    reshuffle the rankings."""
     s = ";".join("x".join(str(d) for d in sh) for sh in shapes)
-    return (f"backend={jax.default_backend()}|interpret={int(interpret)}"
+    return (f"backend={jax.default_backend()}|jax={jax.__version__}"
+            f"|interpret={int(interpret)}"
             f"|shapes={s}|tokens={int(tokens)}|phase={phase}|dtype={dtype}")
 
 
@@ -127,7 +132,7 @@ def _candidates(shapes, tokens, phase, dtype, interpret):
     fwd = {"factorized": lambda cs, xs: mpo.apply_mpo(list(cs), xs),
            "reconstruct": lambda cs, xs: mpo.matmul_reconstruct(xs, cs)}
     for bm in _block_m_candidates(tokens):
-        if kernel_eligible(shapes, bm):
+        if kernel_eligible(shapes, bm, train=phase == "train"):
             fwd[f"kernel@{bm}"] = (
                 lambda cs, xs, bm=bm: mpo_linear(cs, xs, block_m=bm,
                                                  interpret=interpret))

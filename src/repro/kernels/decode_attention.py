@@ -89,6 +89,27 @@ def _flash_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, bias_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def vmem_buffers(group: int, head_dim: int, page_size: int,
+                 itemsize: int) -> list:
+    """One program's VMEM-resident buffers: ``(name, shape, bytes_per_elem,
+    pipelined)`` rows mirroring the ``BlockSpec``s + ``scratch_shapes`` of
+    ``flash_decode_attention`` below — kept in this file so the residency
+    model and the specs change together.  Consumed by
+    ``repro.analysis.kernel_budget`` (pipelined rows cost 2x: Pallas
+    double-buffers streamed blocks; scratch is resident once)."""
+    g, dh, ps = group, head_dim, page_size
+    return [
+        ("q", (1, 1, g, dh), itemsize, True),
+        ("k_page", (1, ps, 1, dh), itemsize, True),
+        ("v_page", (1, ps, 1, dh), itemsize, True),
+        ("bias", (1, ps), 4, True),          # additive mask arrives f32
+        ("out", (1, 1, g, dh), itemsize, True),
+        ("acc_scratch", (g, dh), 4, False),
+        ("m_scratch", (g, 1), 4, False),
+        ("l_scratch", (g, 1), 4, False),
+    ]
+
+
 def _kv_index_map(b, h, p, table, lens, *, page_size, max_pages):
     """Physical page for (slot b, logical page p), clamped to the slot's
     last valid page — consecutive identical block indices make Mosaic skip

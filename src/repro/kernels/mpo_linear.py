@@ -48,6 +48,10 @@ from jax.experimental import pallas as pl
 # used when no measured autotune result exists for a shape.
 BLOCK_M_ALIGN = 8
 DEFAULT_BLOCK_M = 256
+# per-core VMEM (pallas_guide: ~16 MiB per TensorCore).  The feasibility
+# gate below keeps every program's worst-case residency inside it; the
+# static analyzer (repro.analysis.kernel_budget) re-checks the same model.
+VMEM_BUDGET = 16 * 1024 * 1024
 
 
 def validate_block_m(block_m: int) -> None:
@@ -57,21 +61,42 @@ def validate_block_m(block_m: int) -> None:
                          f"{BLOCK_M_ALIGN}, got {block_m}")
 
 
-def kernel_eligible(shapes: Sequence[tuple], block_m: int) -> bool:
+def kernel_eligible(shapes: Sequence[tuple], block_m: int, *,
+                    train: bool = False) -> bool:
     """Can the fused Pallas kernel run these core shapes efficiently?
 
-    The kernel rebuilds one (I/i1, J/j1) W-tile per program; those tile dims
-    must respect the TPU f32 tiling floor (8 sublanes x 128 lanes) or Mosaic
-    pads every tile and the on-chip rebuild loses to plain reconstruct.
-    Used as the *candidate filter* by the autotuner and as the analytic gate
-    when no measurement is available.
+    Two gates, both enforced statically by ``repro.analysis.kernel_budget``:
+
+    * **alignment** — the kernel rebuilds one (I/i1, J/j1) W-tile per
+      program; those tile dims must respect the TPU f32 tiling floor (8
+      sublanes x 128 lanes) or Mosaic pads every tile and the on-chip
+      rebuild loses to plain reconstruct.
+    * **VMEM feasibility** — the program's worst-case residency
+      (``kernel_fits``) must clear the per-core budget; some factorizations
+      produce W-tiles that alone exceed VMEM (a 13824x1024 f32 tile is 54
+      MiB), and compiling those would abort on hardware.
+
+    ``train=True`` additionally requires the backward passes to fit: dL/dx
+    runs this same kernel over i/j-SWAPPED cores (both orientations must
+    clear the floor) and dL/dcores runs ``_bwd_cores_kernel``.
+
+    Used as the *candidate filter* by the autotuner and as the analytic
+    gate when no measurement is available.
     """
+    shapes = [tuple(s) for s in shapes]
     ins = [s[1] for s in shapes]
     outs = [s[2] for s in shapes]
     i_tile = math.prod(ins[1:])
     j_tile = math.prod(outs[1:])
-    return (block_m % BLOCK_M_ALIGN == 0
-            and i_tile % BLOCK_M_ALIGN == 0 and j_tile % 128 == 0)
+    ok = (block_m % BLOCK_M_ALIGN == 0
+          and i_tile % BLOCK_M_ALIGN == 0 and j_tile % 128 == 0
+          and kernel_fits(shapes, block_m))
+    if ok and train:
+        transposed = [(d0, j, i, d1) for (d0, i, j, d1) in shapes]
+        ok = (j_tile % BLOCK_M_ALIGN == 0 and i_tile % 128 == 0
+              and kernel_fits(transposed, block_m)
+              and kernel_fits(shapes, block_m, backward=True))
+    return ok
 
 
 def _effective_block_m(block_m: int, m: int) -> int:
@@ -79,6 +104,64 @@ def _effective_block_m(block_m: int, m: int) -> int:
     (the 8-aligned ceiling of) the token count."""
     return min(block_m, BLOCK_M_ALIGN * ((m + BLOCK_M_ALIGN - 1)
                                          // BLOCK_M_ALIGN))
+
+
+def vmem_buffers(shapes: Sequence[tuple], block_m: int, m: int,
+                 itemsize: int, *, backward: bool = False) -> list:
+    """One program's VMEM-resident buffers: ``(name, shape, bytes_per_elem,
+    pipelined)`` rows.
+
+    MUST mirror the ``BlockSpec``s of ``_fwd_call`` / ``_bwd_cores_call``
+    and the f32 intermediates of the kernel bodies — it lives in this file
+    so the model and the specs change together.  ``repro.analysis.
+    kernel_budget`` sums the rows against the per-core VMEM budget, making
+    a tile that cannot fit a lint error before Mosaic ever sees it.
+    Pipelined rows (blocks whose index map CHANGES across the grid, so the
+    Pallas pipeline double-buffers the HBM↔VMEM stream) cost 2x in
+    residency; constant-index-map blocks (whole cores, revisited
+    accumulators) and kernel-body intermediates are resident once."""
+    shapes = [tuple(s) for s in shapes]
+    ins = [s[1] for s in shapes]
+    outs = [s[2] for s in shapes]
+    i1_blk = math.prod(ins[1:])    # I / i1 — the W-tile's row count
+    j1_blk = math.prod(outs[1:])   # J / j1 — the W-tile's column count
+    bm = _effective_block_m(block_m, m)
+    d1 = shapes[0][3]
+    bufs = [("core0_fiber", (1, 1, 1, d1), itemsize, True)]
+    for k, s in enumerate(shapes[1:], start=1):
+        bufs.append((f"core{k}", s, itemsize, False))
+    bufs.append(("x", (bm, i1_blk), itemsize, True))
+    if backward:
+        bufs.append(("dy", (bm, j1_blk), itemsize, True))
+        bufs.append(("dcore0_fiber", (1, 1, 1, d1), itemsize, True))
+        for k, s in enumerate(shapes[1:], start=1):
+            bufs.append((f"dcore{k}", s, itemsize, False))
+    else:
+        bufs.append(("out", (bm, j1_blk), itemsize, True))
+    # f32 values of the kernel body: the reconstructed W tile (also formed
+    # inside the backward's _tile_w vjp), the upcast x block, and the
+    # partial product / on-chip dW tile
+    bufs.append(("w_tile_f32", (i1_blk, j1_blk), 4, False))
+    bufs.append(("x_f32", (bm, i1_blk), 4, False))
+    if backward:
+        bufs.append(("dy_f32", (bm, j1_blk), 4, False))
+        bufs.append(("dw_tile_f32", (i1_blk, j1_blk), 4, False))
+    else:
+        bufs.append(("part_f32", (bm, j1_blk), 4, False))
+    return bufs
+
+
+def kernel_fits(shapes: Sequence[tuple], block_m: int, *,
+                itemsize: int = 4, backward: bool = False,
+                budget: int = VMEM_BUDGET) -> bool:
+    """Worst-case VMEM feasibility of one program at this tile height
+    (f32 operands assumed — the conservative case)."""
+    used = 0
+    for _, shape, isz, pipelined in vmem_buffers(shapes, block_m, block_m,
+                                                 itemsize,
+                                                 backward=backward):
+        used += math.prod(shape) * isz * (2 if pipelined else 1)
+    return used <= budget
 
 
 def _tile_w(fiber: jax.Array, rest: list) -> jax.Array:

@@ -10,7 +10,6 @@ the state never round-trips HBM between chunks.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

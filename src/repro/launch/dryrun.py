@@ -9,19 +9,17 @@ os.environ["XLA_FLAGS"] = (
 import argparse      # noqa: E402
 import dataclasses   # noqa: E402
 import json          # noqa: E402
-import re            # noqa: E402
 import sys           # noqa: E402
 import time          # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro import configs                       # noqa: E402
 from repro.configs.base import SHAPES           # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import model as M             # noqa: E402
 from repro.parallel import sharding as S        # noqa: E402
-from repro.train.steps import TrainState, lm_loss, make_train_step  # noqa: E402
+from repro.train.steps import TrainState, make_train_step  # noqa: E402
 from repro import optim                          # noqa: E402
 from repro.core import lightweight               # noqa: E402
 
@@ -132,6 +130,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, mpo=True,
     with mesh, current_mesh(mesh), sequence_parallel(sp):
         fn, args, cfg = build_step(arch, shape_name, mesh, mpo=mpo, lfa=lfa,
                                    overrides=overrides)
+        # static placement lint at the PRODUCTION mesh, before paying for
+        # the lowering: the PR-4 bug class (head-splitting rules, data-
+        # sharded norm leaves) surfaces here with provenance instead of as
+        # a compiled-artifact numeric drift
+        from repro.analysis import format_findings, lint_sharding, summarize
+        lint_findings = lint_sharding(cfg, mesh)
+        if any(f.severity == "error" for f in lint_findings):
+            print(format_findings(lint_findings), file=sys.stderr)
         lowered = fn.lower(*args)
         compiled = lowered.compile()
     t1 = time.time()
@@ -146,6 +152,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, mpo=True,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "devices": n_dev,
         "compile_s": round(t1 - t0, 1),
+        # sharding-lint verdict at this exact production mesh (errors were
+        # already printed to stderr above)
+        "sharding_lint": summarize(lint_findings),
         # raw cost_analysis (per-device, scan bodies counted ONCE — see
         # hlo_analysis docstring); kept for cross-checking
         "xla_flops_raw": cost.get("flops", 0.0),

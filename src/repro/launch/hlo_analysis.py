@@ -209,6 +209,21 @@ class HloModule:
                 total += m * _type_bytes(op["type"])
         return total
 
+    def op_histogram(self) -> dict[str, float]:
+        """Trip-weighted op execution counts (per device).  The static
+        linter (``repro.analysis.trace_lint``) reads this to flag ops that
+        have no business inside a decode hot loop — host↔device copies,
+        dynamic reshards — without re-implementing the call-graph walk."""
+        mult = self.multipliers()
+        out: dict[str, float] = defaultdict(float)
+        for comp, ops in self.comps.items():
+            m = mult.get(comp, 0.0)
+            if m == 0.0:
+                continue
+            for op in ops:
+                out[op["op"]] += m
+        return dict(out)
+
     def dot_bytes(self) -> float:
         """HBM-traffic proxy for the memory roofline term: operand + output
         bytes of every dot/convolution (trip-corrected).  A *lower* bound —
@@ -258,4 +273,5 @@ def analyze(hlo_text: str) -> dict:
         "hlo_bytes_written_per_device": mod.bytes_written(),
         "hlo_dot_bytes_per_device": mod.dot_bytes(),
         "hlo_collective_bytes_per_device": mod.collective_bytes(),
+        "hlo_op_histogram": mod.op_histogram(),
     }

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import layers as L
-from repro.core.layers import Annot, MPOConfig
+from repro.core.layers import Annot
 from repro.models import nn
 
 

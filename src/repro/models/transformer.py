@@ -8,8 +8,7 @@ scanned ``is_local`` flag.  VLM configs prepend projected patch embeddings
 
 from __future__ import annotations
 
-import functools
-from typing import Any
+import math
 
 import jax
 import jax.numpy as jnp
@@ -229,7 +228,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
         shape = (nl, batch, max_len, acfg.num_kv_heads, acfg.head_dim)
         return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
                 "pos": jnp.zeros((nl, batch), jnp.int32)}
-    mp = -(-max_len // page_size)                 # logical pages per slot
+    if page_size <= 0:
+        raise ValueError(f"page_size must be positive, got {page_size}")
+    if max_len % page_size != 0:
+        raise ValueError(
+            f"page_size={page_size} does not divide max_len={max_len}: the "
+            f"tail page would be only partially usable and the page-clamped "
+            f"index maps assume full pages. Use a page_size that divides "
+            f"max_len (e.g. {math.gcd(max_len, page_size)}) or round "
+            f"max_len up to {page_size * (-(-max_len // page_size))}.")
+    mp = max_len // page_size                     # logical pages per slot
     pool = batch * mp                             # physical pages per layer
     pshape = (nl, pool, page_size, acfg.num_kv_heads, acfg.head_dim)
     return {

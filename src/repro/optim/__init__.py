@@ -1,5 +1,5 @@
-from repro.optim.optimizers import (adafactor, adamw, sgdm,  # noqa: F401
-                                    OptState, Optimizer)
-from repro.optim.schedule import cosine_warmup, constant  # noqa: F401
 from repro.optim.compress import (ef_int8, ef_topk,  # noqa: F401
                                   wrap_compression)
+from repro.optim.optimizers import (Optimizer, OptState,  # noqa: F401
+                                    adafactor, adamw, sgdm)
+from repro.optim.schedule import constant, cosine_warmup  # noqa: F401

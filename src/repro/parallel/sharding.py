@@ -62,7 +62,7 @@ def head_safe_rules(rules: dict, cfg, mesh: Mesh) -> dict:
     (observed on the 8-device forced-CPU mesh: 2 KV heads over model=4).
     Replicating those two projections costs little — MPO compression keeps
     them small, the DESIGN §4 argument."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = mesh_axis_sizes(mesh)
 
     def axis_prod(name):
         ax = rules.get(name)
@@ -79,24 +79,52 @@ def head_safe_rules(rules: dict, cfg, mesh: Mesh) -> dict:
     return out
 
 
-def spec_for(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> P:
-    """PartitionSpec with per-dim divisibility fallback."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    """mesh axis name -> size.  Reads only ``axis_names``/``devices.shape``,
+    so any duck-typed stand-in (e.g. ``analysis.sharding_lint.MeshSpec``)
+    works — the rule/spec machinery never touches actual devices."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_dims(axes: tuple, shape: tuple, rules: dict, sizes: dict) -> list:
+    """Per-dim resolution with provenance: ``(mesh_axes | None, reason)``.
+
+    ``reason`` is one of ``"sharded"`` (rule applied), ``"replicated"`` (no
+    rule / explicit None), ``"indivisible"`` (rule present but the dim size
+    doesn't divide the mesh-axis product — the silent fallback), or
+    ``"axis_reused"`` (mesh axis already consumed by an earlier dim).
+    ``spec_for`` keeps only the first element; the static linter
+    (``repro.analysis``) reads the reasons to make the fallbacks loud."""
     used = set()
-    parts = []
+    out = []
     for dim, name in zip(shape, axes):
         mesh_axes = rules.get(name) if name is not None else None
         if mesh_axes is None:
-            parts.append(None)
+            out.append((None, "replicated"))
             continue
         if isinstance(mesh_axes, str):
             mesh_axes = (mesh_axes,)
         prod = math.prod(sizes[a] for a in mesh_axes)
-        if dim % prod != 0 or any(a in used for a in mesh_axes):
-            parts.append(None)  # fallback: replicate this dim
+        if dim % prod != 0:
+            out.append((None, "indivisible"))
+            continue
+        if any(a in used for a in mesh_axes):
+            out.append((None, "axis_reused"))
             continue
         used.update(mesh_axes)
-        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        out.append((mesh_axes, "sharded"))
+    return out
+
+
+def spec_for(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> P:
+    """PartitionSpec with per-dim divisibility fallback."""
+    sizes = mesh_axis_sizes(mesh)
+    parts = []
+    for mesh_axes, _ in resolve_dims(axes, shape, rules, sizes):
+        if mesh_axes is None:
+            parts.append(None)
+        else:
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
     # trim trailing Nones (canonical form)
     while parts and parts[-1] is None:
         parts.pop()

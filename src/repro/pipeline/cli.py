@@ -40,6 +40,10 @@ def main(argv=None):
                     help="tokens to decode through the serving path "
                          "(LM tasks only; 0 disables)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--strict-analysis", action="store_true",
+                    help="exit nonzero if the report's static-analysis "
+                         "summary contains errors (repro-lint runs the full "
+                         "sweep; this gates just this session's trees)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -59,8 +63,13 @@ def main(argv=None):
             "cli", "prefill", args.prompt_len, args.batch))
         ids = handle.generate(batch, args.tokens)
         print(f"[repro-pipeline] sample ids: {ids[0].tolist()}")
-    print(json.dumps(session.report(), indent=2))
+    report = session.report()
+    print(json.dumps(report, indent=2))
+    if args.strict_analysis and report.get("analysis", {}).get("errors"):
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.exit(main())

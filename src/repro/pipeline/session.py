@@ -571,4 +571,14 @@ class Session:
             # TPU or REPRO_AUTOTUNE_MEASURE=1): surface where the verdicts
             # live and whether this run paid any tuning cost
             out["autotune"] = tuner.stats()
+        # static-analysis summary over the LIVE trees (sharding placement at
+        # the abstract mesh sweep + kernel budgets at the current core
+        # shapes — squeeze-truncated bonds are re-checked for free).  Never
+        # allowed to break a report.
+        from repro.analysis import session_summary  # lazy
+        try:
+            out["analysis"] = session_summary(self.cfg, self.params,
+                                              self.axes)
+        except Exception as e:  # pragma: no cover - defensive
+            out["analysis"] = {"error": f"{type(e).__name__}: {e}"}
         return out

@@ -7,7 +7,6 @@ import dataclasses
 import time
 from typing import Callable
 
-import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager

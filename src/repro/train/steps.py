@@ -14,7 +14,6 @@ builders below need no changes to pick that up.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

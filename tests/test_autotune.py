@@ -188,3 +188,30 @@ def test_key_distinguishes_dtype_phase_and_substrate():
     assert k != autotune.make_key(SHAPES, TOKENS, "train", "float32",
                                   interpret=False)
     assert "backend=" in k
+
+
+def test_key_includes_jax_version(tuned_env, monkeypatch):
+    """A verdict measured under an older JAX must never answer lookups
+    after an upgrade — compiler changes reshuffle the candidate rankings."""
+    import jax
+    k = autotune.make_key(SHAPES, TOKENS, "prefill", "float32")
+    assert f"jax={jax.__version__}" in k
+    monkeypatch.setattr(jax, "__version__", "0.0.0-preupgrade")
+    old_key = autotune.make_key(SHAPES, TOKENS, "prefill", "float32")
+    assert old_key != k
+    # seed a disk verdict under the old version, then "upgrade" back:
+    # the lookup must MISS (re-measure), not serve the stale ranking
+    with open(tuned_env, "w") as f:
+        json.dump({"version": autotune.CACHE_VERSION,
+                   "entries": {old_key: {"mode": "kernel", "block_m": 64,
+                                         "timings": {}}}}, f)
+    monkeypatch.undo()
+    monkeypatch.setenv(autotune.ENV_CACHE, tuned_env)
+    monkeypatch.setenv(autotune.ENV_MEASURE, "1")
+    eng, tuner = _fresh_engine()
+    plan = eng.plan(SHAPES, TOKENS, "prefill")
+    assert plan.tuned and tuner.timing_runs > 0  # stale entry not consulted
+    # both substrate generations coexist in the rewritten file
+    entries = json.load(open(tuned_env))["entries"]
+    assert old_key in entries
+    assert autotune.make_key(SHAPES, TOKENS, "prefill", "float32") in entries

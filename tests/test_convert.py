@@ -9,8 +9,8 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import ShapeConfig
-from repro.core.convert import conversion_error, convert_dense_to_mpo
 from repro.core import lightweight
+from repro.core.convert import conversion_error, convert_dense_to_mpo
 from repro.models import model as M
 
 

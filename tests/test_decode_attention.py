@@ -9,12 +9,11 @@ where the race itself is."""
 
 import json
 import math
-import os
 
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro import Session
 from repro.kernels import autotune
@@ -193,6 +192,25 @@ def test_paged_rejected_for_ssm_family():
     s = Session.init("mamba2-130m")
     with pytest.raises(ValueError, match="paged"):
         s.serve_pool(slots=2, max_len=MAX_LEN, paged=True)
+
+
+def test_paged_cache_rejects_indivisible_page_size():
+    """page_size must divide max_len: the page-clamped index maps assume
+    full pages, so a partial tail page would read garbage.  The error must
+    be actionable (suggest a working page_size / rounded max_len)."""
+    from repro import configs
+    from repro.models import model as M
+    model = M.build(configs.smoke_config("qwen3-14b"))
+    with pytest.raises(ValueError) as ei:
+        model.init_cache(2, 24, paged=True, page_size=16)
+    msg = str(ei.value)
+    assert "page_size=16" in msg and "max_len=24" in msg
+    assert "8" in msg and "32" in msg    # gcd suggestion + rounded max_len
+    with pytest.raises(ValueError, match="positive"):
+        model.init_cache(2, 24, paged=True, page_size=0)
+    # divisible sizes construct fine, tail page included
+    cache = model.init_cache(2, 32, paged=True, page_size=16)
+    assert cache["page_table"].shape[-1] == 2
 
 
 # --------------------------------------------------------------------------

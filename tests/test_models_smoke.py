@@ -55,7 +55,6 @@ def test_one_train_step(arch, built):
     new_state, metrics = step(state, batch)
     assert bool(jnp.isfinite(metrics["loss"]))
     # LFA: central cores unchanged, auxiliaries moved
-    layers = new_state.params
     flat_old = jax.tree_util.tree_flatten_with_path(params)[0]
     flat_new = jax.tree.leaves(new_state.params)
     moved_aux, frozen_central = False, True

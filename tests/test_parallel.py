@@ -1,6 +1,5 @@
 """Sharding rules, mesh ctx, SP layout, and optimizer-transform unit tests."""
 
-import math
 import os
 import subprocess
 import sys
@@ -89,6 +88,40 @@ def test_rules_divisibility_fallback():
     """)
     r = _subproc(code)
     assert "RULES_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_head_safe_rules_mqa_and_exact_boundary():
+    """Edge cases of the head-splitting guard: MQA (kv_heads=1) must drop
+    the KV TP rule on any model axis > 1 (1 head cannot shard), and a mesh
+    whose model axis EQUALS the head count keeps the rule (each device gets
+    exactly one head — legal, no head_dim split)."""
+    import dataclasses
+    from repro import configs
+    from repro.analysis import MeshSpec
+    from repro.parallel import sharding as S
+
+    base = configs.get_config("qwen3-14b")
+    mqa = dataclasses.replace(base, num_heads=8, num_kv_heads=1)
+    mesh4 = MeshSpec({"data": 1, "model": 4})
+    rules = S.head_safe_rules(S.make_rules(mesh4), mqa, mesh4)
+    assert rules["kv_qkv"] is None          # 1 % 4 != 0: replicate KV
+    assert rules["qkv"] == ("model",)       # 8 % 4 == 0: Q stays sharded
+
+    exact = dataclasses.replace(base, num_heads=8, num_kv_heads=8)
+    mesh8 = MeshSpec({"data": 1, "model": 8})
+    rules = S.head_safe_rules(S.make_rules(mesh8), exact, mesh8)
+    assert rules["qkv"] == ("model",)       # one head per device: legal
+    assert rules["kv_qkv"] == ("model",)
+
+    # one past the boundary: 8 heads over model=16 would split head_dim
+    mesh16 = MeshSpec({"data": 1, "model": 16})
+    rules = S.head_safe_rules(S.make_rules(mesh16), exact, mesh16)
+    assert rules["qkv"] is None and rules["kv_qkv"] is None
+
+    # trivial mesh never drops anything
+    mesh1 = MeshSpec({"data": 1, "model": 1})
+    rules = S.head_safe_rules(S.make_rules(mesh1), mqa, mesh1)
+    assert rules["qkv"] == ("model",) and rules["kv_qkv"] == ("model",)
 
 
 def test_sp_lowering_small_mesh():

@@ -3,9 +3,9 @@ packing, per-slot EOS/budget tracking, recycling parity with serial
 generation, admission validation, and stats/report plumbing.  The
 multi-device (forced CPU mesh) pool tests live in ``test_serve_mesh.py``."""
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 from repro import Session
 from repro.pipeline.scheduler import ServePool
