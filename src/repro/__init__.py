@@ -17,6 +17,10 @@ Stable public surface
                        ``configs.smoke_config``)
 ``optim``              masked optimizers (LFA), schedules, EF compression
 ``autotune``           measured kernel tuning (cache path, reset, stats)
+``resilience``         fault-tolerant lifecycle: ``Session.save/restore``
+                       internals, squeeze journaling, and the
+                       deterministic fault-injection harness
+                       (``FaultPlan`` / ``fault_scope``)
 
 Everything else (``repro.core.*``, ``repro.train.*``, ``repro.models.*``,
 ``repro.kernels.*``) is the low-level API underneath — stable enough to
@@ -49,6 +53,7 @@ __all__ = [
     "MPOEngine", "ExecutionPlan", "engine_for", "choose_mode",
     "ModelConfig", "ShapeConfig",
     "configs", "optim", "pipeline", "autotune",
+    "resilience", "FaultPlan",
 ]
 
 _EXPORTS = {
@@ -71,6 +76,9 @@ _EXPORTS = {
     "pipeline": "repro.pipeline",
     # measured kernel autotuning (cache path / reset / stats)
     "autotune": "repro.kernels.autotune",
+    # fault-tolerant lifecycle (save/restore, journaling, chaos harness)
+    "resilience": "repro.resilience",
+    "FaultPlan": "repro.resilience.faults",
 }
 
 

@@ -7,17 +7,35 @@ mid-save can never corrupt the restore point.  ``restore(..., shardings=...)``
 re-lays-out arrays onto any mesh — this is the elastic-resize path (a 256-chip
 checkpoint restores onto 512 chips and vice versa, since arrays are saved as
 full logical tensors).
+
+Durability contract (exercised by the chaos suite, ``tests/test_resilience``
+with ``resilience.faults`` crash points):
+
+* a kill at ANY point inside ``_write`` leaves either the previous intact
+  checkpoint reachable through ``latest`` (crash before the symlink flip) or
+  the new one (crash after) — never a torn one;
+* transient ``OSError``s are retried with exponential backoff
+  (``io_retries`` / ``io_backoff``) before surfacing;
+* an async save that failed re-raises its error on the next ``save()`` or
+  ``wait()`` instead of losing it silently, and in-flight writers are joined
+  at interpreter exit (``atexit``) so a clean shutdown never truncates a
+  checkpoint.
 """
 
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import shutil
 import threading
+import time
+import weakref
 
 import jax
 import numpy as np
+
+from repro.resilience import faults
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -48,13 +66,32 @@ def _unflatten_into(template, arrays: dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+# managers with potentially in-flight async writers, joined at interpreter
+# exit so a clean process shutdown never abandons a half-written checkpoint
+_LIVE_MANAGERS: "weakref.WeakSet[CheckpointManager]" = weakref.WeakSet()
+
+
+@atexit.register
+def _drain_managers() -> None:  # pragma: no cover - exercised at exit
+    for mgr in list(_LIVE_MANAGERS):
+        try:
+            mgr.wait()
+        except BaseException:
+            pass  # exiting anyway; the atomic layout bounds the damage
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 io_retries: int = 3, io_backoff: float = 0.05):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        self.io_retries = io_retries
+        self.io_backoff = io_backoff
         self._thread: threading.Thread | None = None
-        os.makedirs(directory, exist_ok=True)
+        self._error: BaseException | None = None
+        self._io(os.makedirs, directory, exist_ok=True)
+        _LIVE_MANAGERS.add(self)
 
     # ---- save ----
 
@@ -63,32 +100,61 @@ class CheckpointManager:
         # snapshot to host memory synchronously (cheap), write async
         arrays = _flatten(jax.device_get(tree))
         meta = {"step": int(step), **(extra_meta or {})}
-        self.wait()  # never two writers (same step dir -> corruption race)
+        self.wait()  # never two writers (same step dir -> corruption race);
+        # also surfaces the PREVIOUS async save's failure before this one
+        # silently papers over it
         if self.async_save and not block:
             self._thread = threading.Thread(
-                target=self._write, args=(step, arrays, meta), daemon=True)
+                target=self._write_guarded, args=(step, arrays, meta),
+                daemon=True)
             self._thread.start()
         else:
             self._write(step, arrays, meta)
+
+    def _write_guarded(self, step: int, arrays, meta):
+        try:
+            self._write(step, arrays, meta)
+        except BaseException as e:  # held for the next save()/wait() to raise
+            self._error = e
+
+    def _io(self, fn, *args, **kwargs):
+        """Run one filesystem operation, retrying transient ``OSError``s
+        with exponential backoff (I/O faults injected at site ``"ckpt"``)."""
+        delay = self.io_backoff
+        for attempt in range(self.io_retries + 1):
+            try:
+                faults.io_check("ckpt")
+                return fn(*args, **kwargs)
+            except OSError:
+                if attempt == self.io_retries:
+                    raise
+                time.sleep(delay)
+                delay *= 2
 
     def _write(self, step: int, arrays, meta):
         tmp = os.path.join(self.dir, f".tmp_step_{step}")
         final = os.path.join(self.dir, f"step_{step}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
+        self._io(os.makedirs, tmp)
+        faults.crash_point("ckpt:mid_write", step)
+        self._io(np.savez, os.path.join(tmp, "arrays.npz"), **arrays)
+
+        def _dump_meta():
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+
+        self._io(_dump_meta)
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)  # atomic publish
+        self._io(os.rename, tmp, final)  # atomic publish
+        faults.crash_point("ckpt:pre_latest", step)
         latest = os.path.join(self.dir, "latest")
         tmp_link = latest + ".tmp"
         if os.path.lexists(tmp_link):
             os.remove(tmp_link)
-        os.symlink(f"step_{step}", tmp_link)
-        os.replace(tmp_link, latest)
+        self._io(os.symlink, f"step_{step}", tmp_link)
+        self._io(os.replace, tmp_link, latest)
         self._gc()
 
     def _gc(self):
@@ -98,8 +164,13 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def wait(self):
+        """Join the in-flight async writer (if any) and re-raise the error
+        it hit, if it hit one — a failed save must never stay invisible."""
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
 
     # ---- restore ----
 
@@ -111,7 +182,23 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> int | None:
-        steps = self.all_steps()
+        """The restore point: the step the ``latest`` symlink names, when it
+        points at an intact checkpoint — crash-consistency comes from the
+        symlink being flipped only AFTER a full write, so a step dir that
+        exists but was never linked (crash between publish and flip) is not
+        preferred over the last known-good one.  Falls back to the newest
+        complete step dir when the symlink is missing/dangling."""
+        link = os.path.join(self.dir, "latest")
+        try:
+            target = os.readlink(link)
+            step = int(target.rsplit("_", 1)[1])
+            if os.path.exists(os.path.join(self.dir, target, "arrays.npz")):
+                return step
+        except (OSError, ValueError, IndexError):
+            pass
+        steps = [s for s in self.all_steps()
+                 if os.path.exists(os.path.join(self.dir, f"step_{s}",
+                                                "arrays.npz"))]
         return steps[-1] if steps else None
 
     def restore(self, step: int | None, template, shardings=None):

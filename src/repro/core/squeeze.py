@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import mpo
 from repro.core.layers import cores_from_list, cores_to_list
+from repro.resilience import faults
 
 
 # ---- locating MPO layers inside an arbitrary (nested-dict) param tree ----
@@ -141,6 +142,10 @@ def run_dimension_squeezing(
     min_bond: int = 1,
     verbose: bool = False,
     weight_cache: Callable | None = None,
+    start_iter: int = 0,
+    initial_history: list | None = None,
+    baseline_metric: float | None = None,
+    on_iteration: Callable | None = None,
 ):
     """Paper Algorithm 2.  Returns (params, history).
 
@@ -151,13 +156,24 @@ def run_dimension_squeezing(
     contracted before the bond was squeezed — is never consulted.  Without
     it, evaluations see the raw factorized params (no snapshot exists to go
     stale).
+
+    Resumability (``resilience.journal.SqueezeJournal`` /
+    ``Session.squeeze(ckpt_dir=...)``): ``on_iteration(it, params, history,
+    baseline)`` fires after every ACCEPTED iteration; a preempted run passes
+    the journaled ``start_iter``/``initial_history``/``baseline_metric``
+    (plus the journaled params) back in and continues at the last completed
+    iteration — re-evaluating the baseline on already-squeezed params would
+    corrupt the stop rule, hence it travels with the journal.  Every
+    ingredient is deterministic, so resumed == uninterrupted, bit for bit.
     """
     ev = eval_fn if weight_cache is None \
         else (lambda p: eval_fn(weight_cache(p)))
-    history: list[SqueezeEvent] = []
-    p0 = float(ev(params))
+    history: list[SqueezeEvent] = list(initial_history or [])
+    p0 = float(baseline_metric) if baseline_metric is not None \
+        else float(ev(params))
     best_params = params
-    for it in range(max_iters):
+    for it in range(start_iter, max_iters):
+        faults.step_tick("squeeze", it)
         new_params, info = squeeze_once(params, step=step, min_bond=min_bond)
         if info is None:
             break
@@ -175,6 +191,8 @@ def run_dimension_squeezing(
             return best_params, history
         params = new_params
         best_params = new_params
+        if on_iteration is not None:
+            on_iteration(it, params, history, p0)
     return best_params, history
 
 

@@ -277,6 +277,50 @@ class Autotuner:
         return best
 
 
+# ---- fleet warm-start: shippable verdict artifacts ----
+
+
+def export_cache(dest: str) -> dict:
+    """Pack the on-disk verdict cache into a shippable artifact at ``dest``
+    (same schema as the cache file, so the artifact is itself a valid
+    cache).  A fleet of serving processes imports it once and never
+    cold-tunes.  Returns ``{"exported": n, "path": dest}``."""
+    entries = _read_cache(cache_path())
+    if _tuner is not None:
+        # verdicts measured by THIS process are already persisted by
+        # get(), but a tuner pointed at a custom path may hold more
+        entries.update(_read_cache(_tuner.path))
+    os.makedirs(os.path.dirname(os.path.abspath(dest)), exist_ok=True)
+    tmp = f"{dest}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"version": CACHE_VERSION, "entries": entries}, f,
+                  indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, dest)
+    return {"exported": len(entries), "path": dest}
+
+
+def import_cache(src: str, *, overwrite: bool = False) -> dict:
+    """Merge an exported artifact into the local verdict cache.  Local
+    verdicts win on conflict unless ``overwrite=True`` (a locally-measured
+    verdict is at least as fresh as a shipped one).  Invalid/stale
+    artifacts import zero entries instead of failing — warm-start is an
+    optimization, never a crash.  Returns merge counts."""
+    incoming = _read_cache(src)
+    path = _tuner.path if _tuner is not None else cache_path()
+    local = _read_cache(path)
+    added = 0
+    for key, ent in incoming.items():
+        if overwrite or key not in local:
+            local[key] = ent
+            added += 1
+    _write_cache(path, local)
+    if _tuner is not None:
+        _tuner._disk = None  # next lookup re-reads the merged cache
+    return {"imported": added, "skipped": len(incoming) - added,
+            "total": len(local), "path": path}
+
+
 _tuner: Autotuner | None = None
 
 

@@ -33,15 +33,34 @@ from __future__ import annotations
 import functools
 import math
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.resilience import faults
+
 ENV_IMPL = "REPRO_DECODE_ATTN"      # "flash" | "xla" force-override
 MASK_VALUE = -2.3819763e38          # same fill nn.attention_scores uses
 _TINY = 1e-30                       # zero-valid-keys guard (idle slots)
+
+# times the flash kernel raised and the caller degraded to the XLA gather
+# path this process (``note_fallback``); surfaced by ServePool.stats()
+FALLBACKS = 0
+
+
+def note_fallback(exc: BaseException) -> None:
+    """Record (and warn about, once per process per message) a flash ->
+    XLA degradation.  The gather path is bitwise-identical, so serving
+    continues correct-but-slower instead of dying with the kernel."""
+    global FALLBACKS
+    FALLBACKS += 1
+    warnings.warn(
+        f"flash decode-attention failed ({type(exc).__name__}: {exc}); "
+        "falling back to the bitwise-identical XLA gather path",
+        RuntimeWarning, stacklevel=3)
 
 
 # --------------------------------------------------------------------------
@@ -125,7 +144,6 @@ def _bias_index_map(b, h, p, table, lens, *, page_size):
     return b, jnp.minimum(p, jnp.maximum(npages - 1, 0))
 
 
-@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def flash_decode_attention(q, k_pages, v_pages, page_table, lengths, bias,
                            *, softcap: float | None = None,
                            interpret: bool = True):
@@ -139,6 +157,14 @@ def flash_decode_attention(q, k_pages, v_pages, page_table, lengths, bias,
 
     Returns (B, KV, G, Dh) in q's dtype.  Softmax statistics are f32.
     """
+    faults.check_flash()   # chaos: simulate a kernel failure at trace time
+    return _flash_jit(q, k_pages, v_pages, page_table, lengths, bias,
+                      softcap=softcap, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def _flash_jit(q, k_pages, v_pages, page_table, lengths, bias,
+               *, softcap: float | None = None, interpret: bool = True):
     b, kv, g, dh = q.shape
     _, page_size, _, _ = k_pages.shape
     max_pages = page_table.shape[1]
@@ -225,8 +251,7 @@ def _race_candidates(shapes, tokens, phase, dtype, interpret):
         w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
         return jnp.einsum("bkgs,bskd->bkgd", w.astype(v.dtype), v)
 
-    flash = jax.jit(functools.partial(flash_decode_attention,
-                                      interpret=interpret))
+    flash = jax.jit(functools.partial(_flash_jit, interpret=interpret))
     xla = jax.jit(xla_ref)
     return [("flash", lambda: flash(q, kp, vp, table, lens, bias)),
             ("xla", lambda: xla(q, kp, vp, table, lens, bias))]

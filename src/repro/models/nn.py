@@ -235,15 +235,24 @@ def _paged_attention(params, q, k, v, cache, cfg: AttnCfg, mpo: MPOConfig,
         ps, mp = kp.shape[1], table.shape[1]
         impl = DA.choose_impl(kvh, g, dh, ps, mp, str(q.dtype),
                               interpret=ops.INTERPRET)
+        y = None
         if impl == "flash":
             lengths = jnp.minimum(new_cache["pos"], mp * ps).astype(jnp.int32)
             bias = jnp.where(mask[:, 0, 0], 0.0, DA.MASK_VALUE
                              ).astype(jnp.float32)
-            y = DA.flash_decode_attention(
-                q[:, 0].reshape(b, kvh, g, dh), kp, vp, table, lengths,
-                bias, softcap=cfg.attn_softcap, interpret=ops.INTERPRET)
-            y = y[:, None]                         # (B, 1, KV, G, Dh)
-        else:
+            try:
+                y = DA.flash_decode_attention(
+                    q[:, 0].reshape(b, kvh, g, dh), kp, vp, table, lengths,
+                    bias, softcap=cfg.attn_softcap, interpret=ops.INTERPRET)
+                y = y[:, None]                     # (B, 1, KV, G, Dh)
+            except Exception as e:                 # noqa: BLE001
+                # Pallas failures surface at trace/lowering time; degrade
+                # to the bitwise-identical gather path rather than dying.
+                # (A compiled-runtime fault is not catchable here — see
+                # docs/resilience.md for the limitation.)
+                DA.note_fallback(e)
+                y = None
+        if y is None:
             kc = DA.gather_pages(kp, table)
             vc = DA.gather_pages(vp, table)
             w = attention_scores(q, kc, cfg, mask)

@@ -204,7 +204,8 @@ def forward_cls(params, batch, cfg: ModelConfig):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
-               paged: bool = False, page_size: int = 16):
+               paged: bool = False, page_size: int = 16,
+               pool_pages: int | None = None):
     """KV cache with PER-SLOT positions: ``pos`` is (layers, batch), so each
     batch row ("slot") can sit at its own decode offset — the substrate for
     multi-tenant batched decode (``pipeline.scheduler.ServePool``), where
@@ -217,10 +218,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
     pages are allocated lazily off a ``free_list`` stack as a slot's
     context grows — so decode attention bandwidth scales with a slot's own
     length (``kernels.decode_attention``), and ``ServePool`` returns a
-    finished slot's pages to the pool at recycle.  The pool holds
-    ``batch * ceil(max_len / page_size)`` pages (worst case every slot
-    full), so allocation can never exhaust it.  Every leaf keeps the
-    leading layers dim for the ``lax.scan`` over the stack."""
+    finished slot's pages to the pool at recycle.  By default the pool
+    holds ``batch * ceil(max_len / page_size)`` pages (worst case every
+    slot full), so allocation can never exhaust it; pass ``pool_pages``
+    smaller to oversubscribe — then ``ServePool`` enforces page-reservation
+    admission so the free list still never underflows (a raw underflow
+    would wrap ``free_list`` indexing negative and silently alias pages).
+    Every leaf keeps the leading layers dim for the ``lax.scan`` over the
+    stack."""
     dtype = dtype or cfg.jnp_dtype
     acfg = attn_cfg(cfg)
     nl = cfg.num_layers
@@ -238,7 +243,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
             f"max_len (e.g. {math.gcd(max_len, page_size)}) or round "
             f"max_len up to {page_size * (-(-max_len // page_size))}.")
     mp = max_len // page_size                     # logical pages per slot
-    pool = batch * mp                             # physical pages per layer
+    pool = batch * mp if pool_pages is None else int(pool_pages)
+    if not 1 <= pool <= batch * mp:
+        raise ValueError(
+            f"pool_pages={pool_pages} out of range [1, {batch * mp}] "
+            f"(batch={batch} slots x {mp} pages each); oversubscribe by "
+            f"passing fewer pages than batch*max_pages, never more")
     pshape = (nl, pool, page_size, acfg.num_kv_heads, acfg.head_dim)
     return {
         "k_pages": jnp.zeros(pshape, dtype),

@@ -8,17 +8,106 @@ stage report as JSON.
 Run:  repro-pipeline --arch qwen3-14b --steps 40 --tokens 8
       repro-pipeline --arch albert-base --cls --squeeze
       (or: python -m repro.pipeline.cli ...)
+
+Resilience (docs/resilience.md):
+
+* ``--session-dir DIR`` — restore the session from DIR when a manifest
+  exists there (skipping straight to serving + report), else run the
+  lifecycle and ``Session.save`` it to DIR at the end.
+* ``--ckpt-dir DIR`` — fine-tune checkpoints in DIR, squeeze journal in
+  DIR/squeeze; a preempted run re-invoked with the same flags resumes.
+* ``--chaos SPEC`` (repeatable) — activate a deterministic ``FaultPlan``
+  (grammar in ``resilience.faults.FaultPlan.parse``), e.g.
+  ``--chaos preempt-squeeze:2``.  An injected preemption exits 3, an
+  injected checkpoint crash exits 4 — rerun to resume.
+
+Fleet warm-start subcommands (autotune verdicts as a shippable artifact):
+
+    repro-pipeline tune-export PATH      pack this host's autotune cache
+    repro-pipeline tune-import PATH      merge an artifact into the cache
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
+import os
+import sys
+
+
+def _tune_main(argv) -> int:
+    """tune-export / tune-import: pack or merge the autotune disk cache."""
+    cmd = argv[0]
+    ap = argparse.ArgumentParser(
+        prog=f"repro-pipeline {cmd}",
+        description="Export this host's kernel-autotune verdicts as a "
+                    "fleet-shippable artifact, or merge such an artifact "
+                    "into the local cache (local verdicts win unless "
+                    "--overwrite).")
+    ap.add_argument("path", help="artifact path (a JSON verdict pack)")
+    if cmd == "tune-import":
+        ap.add_argument("--overwrite", action="store_true",
+                        help="imported verdicts replace local ones on "
+                             "key collisions")
+    args = ap.parse_args(argv[1:])
+    from repro.kernels import autotune
+    if cmd == "tune-export":
+        res = autotune.export_cache(args.path)
+        print(f"[tune-export] {res['exported']} verdicts -> {res['path']}")
+    else:
+        res = autotune.import_cache(args.path, overwrite=args.overwrite)
+        print(f"[tune-import] {res['imported']} imported, "
+              f"{res['skipped']} skipped (local wins) -> {res['path']} "
+              f"({res['total']} total)")
+    return 0
+
+
+def _run(args) -> int:
+    from repro.pipeline import Session
+
+    session = None
+    if args.session_dir and os.path.exists(
+            os.path.join(args.session_dir, "session.json")):
+        session = Session.restore(args.session_dir)
+        print(f"[repro-pipeline] restored session from {args.session_dir} "
+              f"(stage={session.stage}, "
+              f"weights_version={session.weights_version})")
+    if session is None:
+        overrides = {"num_classes": 2} if args.cls else {}
+        session = Session.init(args.arch, **overrides)
+        session.finetune(mode=args.mode, steps=args.steps, lr=args.lr,
+                         ckpt_dir=args.ckpt_dir, verbose=args.verbose)
+        if args.squeeze:
+            jdir = (os.path.join(args.ckpt_dir, "squeeze")
+                    if args.ckpt_dir else None)
+            session.squeeze(delta=args.delta, max_iters=args.max_iters,
+                            ckpt_dir=jdir, verbose=args.verbose)
+        if args.session_dir:
+            session.save(args.session_dir)
+            print(f"[repro-pipeline] session saved to {args.session_dir}")
+    if args.tokens and session.task == "lm":
+        from repro.configs.base import ShapeConfig
+        from repro.models import model as M
+        handle = session.serve(args.batch,
+                               args.prompt_len + args.tokens + 1)
+        batch = M.make_batch(session.cfg, ShapeConfig(
+            "cli", "prefill", args.prompt_len, args.batch))
+        ids = handle.generate(batch, args.tokens)
+        print(f"[repro-pipeline] sample ids: {ids[0].tolist()}")
+    report = session.report()
+    print(json.dumps(report, indent=2))
+    if args.strict_analysis and report.get("analysis", {}).get("errors"):
+        return 1
+    return 0
 
 
 def main(argv=None):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] in ("tune-export", "tune-import"):
+        return _tune_main(argv)
+
     from repro import configs
-    from repro.pipeline import Session
 
     ap = argparse.ArgumentParser(prog="repro-pipeline", description=__doc__)
     ap.add_argument("--arch", default="qwen3-14b", choices=list(configs.ARCHS))
@@ -39,7 +128,19 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=8,
                     help="tokens to decode through the serving path "
                          "(LM tasks only; 0 disables)")
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="fine-tune checkpoints here; the squeeze journal "
+                         "goes in <dir>/squeeze — rerun with the same "
+                         "flags to resume a preempted run")
+    ap.add_argument("--session-dir", default=None,
+                    help="restore the session from here if a manifest "
+                         "exists, else save the finished session here")
+    ap.add_argument("--chaos", action="append", default=[], metavar="SPEC",
+                    help="inject a deterministic fault (repeatable); "
+                         "grammar: preempt-finetune:K, preempt-squeeze:K, "
+                         "crash-ckpt:mid_write[:STEP], "
+                         "crash-ckpt:pre_latest[:STEP], io:SITE:N, "
+                         "nan-decode:STEP[:SLOT], deny-pages:N, flash-raise")
     ap.add_argument("--strict-analysis", action="store_true",
                     help="exit nonzero if the report's static-analysis "
                          "summary contains errors (repro-lint runs the full "
@@ -47,29 +148,21 @@ def main(argv=None):
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
-    overrides = {"num_classes": 2} if args.cls else {}
-    session = Session.init(args.arch, **overrides)
-    session.finetune(mode=args.mode, steps=args.steps, lr=args.lr,
-                     ckpt_dir=args.ckpt_dir, verbose=args.verbose)
-    if args.squeeze:
-        session.squeeze(delta=args.delta, max_iters=args.max_iters,
-                        verbose=args.verbose)
-    if args.tokens and session.task == "lm":
-        from repro.configs.base import ShapeConfig
-        from repro.models import model as M
-        handle = session.serve(args.batch,
-                               args.prompt_len + args.tokens + 1)
-        batch = M.make_batch(session.cfg, ShapeConfig(
-            "cli", "prefill", args.prompt_len, args.batch))
-        ids = handle.generate(batch, args.tokens)
-        print(f"[repro-pipeline] sample ids: {ids[0].tolist()}")
-    report = session.report()
-    print(json.dumps(report, indent=2))
-    if args.strict_analysis and report.get("analysis", {}).get("errors"):
-        return 1
-    return 0
+    from repro.resilience import faults
+    scope = (faults.fault_scope(faults.FaultPlan.parse(args.chaos))
+             if args.chaos else contextlib.nullcontext())
+    try:
+        with scope:
+            return _run(args)
+    except faults.Preemption as e:
+        print(f"[repro-pipeline] preempted: {e} — rerun with the same "
+              "--ckpt-dir/--session-dir to resume", file=sys.stderr)
+        return 3
+    except faults.CrashPoint as e:
+        print(f"[repro-pipeline] crashed: {e} — the previous checkpoint "
+              "is intact; rerun to resume", file=sys.stderr)
+        return 4
 
 
 if __name__ == "__main__":
-    import sys
     sys.exit(main())

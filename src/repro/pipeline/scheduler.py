@@ -25,6 +25,24 @@ Works transparently over a mesh-sharded serving state (``mesh=`` — see
 ``docs/serving.md``): the pool cache lives in the flash-decoding layout and
 admission scatters into the sharded rows.
 
+Graceful degradation (see docs/resilience.md "Degradation policy"): a bad
+request fails ALONE; healthy tenants keep their slots and their tokens.
+
+* page-reservation admission — each request reserves its worst-case page
+  count up front, so an oversubscribed pool (``pool_pages=``) backpressures
+  at admission (bounded FIFO retry, then a per-request failure) instead of
+  underflowing the free list mid-decode;
+* a NaN/inf logit guard quarantines only the offending slot (fail + free
+  the pages, no token appended) — the other slots' tokens are
+  bit-identical to a fault-free run;
+* per-request deadlines (``submit(deadline_s=)``) and a pool wall-clock
+  budget (``run(budget_s=)``) expire stragglers as failures;
+* flash decode-attention degrades to the bitwise-identical XLA gather path
+  when the Pallas call raises (``models.nn._paged_attention``).
+
+Failures are reported per-request: ``request(rid).status == "failed"`` with
+``.error``, and aggregated in ``stats()["failures"]``.
+
 Example::
 
     pool = session.serve_pool(slots=4, max_len=64)
@@ -44,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.resilience import faults
 from repro.train.steps import make_serve_steps
 
 # families whose decode step tolerates per-slot state: transformers carry
@@ -58,15 +77,25 @@ class Request:
     """One tenant's generation request, tracked by the pool.
 
     ``tokens`` accumulates the generated ids (the first comes from the
-    admission prefill, the rest from batched decode steps); ``done`` flips
-    when the budget is exhausted or ``eos_id`` was emitted."""
+    admission prefill, the rest from batched decode steps).  ``status``
+    walks ``queued -> live -> done`` — or ``-> failed`` (NaN quarantine,
+    deadline/budget expiry, admission retry exhaustion), with the reason in
+    ``error``.  ``done`` stays the boolean "completed successfully" flag
+    (failed requests are terminal but NOT done)."""
 
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
     eos_id: int | None = None
+    deadline_s: float | None = None
     tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "queued"         # queued | live | done | failed
+    error: str | None = None
+    slot: int | None = None
+    submitted_at: float = 0.0      # time.monotonic() at submit
+    admit_denials: int = 0         # backpressure retries so far
+    pages_reserved: int = 0        # worst-case pages held while admitted
 
     @property
     def output(self) -> np.ndarray:
@@ -89,7 +118,9 @@ class ServePool:
     def __init__(self, model, params, slots: int, max_len: int, *,
                  weight_cache: bool = True, mesh=None, rules=None,
                  axes=None, version: int = 0, paged: bool = False,
-                 page_size: int = 16):
+                 page_size: int = 16, pool_pages: int | None = None,
+                 admission_retry_limit: int = 1000,
+                 guard_logits: bool = True):
         if model.cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"ServePool supports families {SUPPORTED_FAMILIES}; "
@@ -101,15 +132,20 @@ class ServePool:
                              "cache; family 'ssm' has none")
         if slots < 1:
             raise ValueError(f"slots={slots} must be >= 1")
+        if pool_pages is not None and not paged:
+            raise ValueError("pool_pages= requires paged=True")
         self.slots, self.max_len = slots, max_len
         self.mesh = mesh
         self.version = version
         self.paged, self.page_size = paged, page_size
+        self.admission_retry_limit = admission_retry_limit
+        self.guard_logits = guard_logits
         t0 = time.perf_counter()
         # pool-batch steps: one jitted decode over all slots
         prefill, self._decode, init_pool = make_serve_steps(
             model, weight_cache=weight_cache, mesh=mesh, rules=rules,
-            axes=axes, paged=paged, page_size=page_size)
+            axes=axes, paged=paged, page_size=page_size,
+            pool_pages=pool_pages)
         self._sparams, self._cache = init_pool(params, slots, max_len)
         if paged:
             # park every slot at the capacity sentinel: idle rows neither
@@ -150,16 +186,26 @@ class ServePool:
         self._adopt = jax.jit(self._adopt_paged_fn if paged
                               else self._adopt_fn)
         self._free = jax.jit(self._free_slot_fn) if paged else None
+        # per-slot finiteness of the decode logits (device-side reduce: a
+        # (slots,) bool vector crosses to host, never the logits)
+        self._finite = jax.jit(
+            lambda l: jnp.isfinite(l).all(axis=tuple(range(1, l.ndim))))
         self._requests: dict[int, Request] = {}
         self._queue: collections.deque[int] = collections.deque()
         self._slot_rid: list[int | None] = [None] * slots
         self._last_tok = np.zeros((slots, 1), np.int32)
         self._next_rid = 0
+        # page-reservation admission state (paged pools only)
+        self._total_pages = (int(self._cache["k_pages"].shape[1])
+                             if paged else 0)
+        self._reserved_pages = 0
         # ---- stats ----
         self._decode_steps = 0
         self._live_slot_steps = 0       # sum of live slots over decode steps
         self._tokens_generated = 0
         self._completed = 0
+        self._failed = 0
+        self._failures: list[dict] = []
         self._decode_seconds = 0.0
         self._admit_seconds = 0.0
 
@@ -246,11 +292,26 @@ class ServePool:
         return dict(cache, page_table=tbl, pos=pos, free_list=fl,
                     free_count=fc)
 
-    def submit(self, prompt, max_new_tokens: int,
-               eos_id: int | None = None) -> int:
+    def _need_pages(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page count a request can ever occupy: the prefill
+        appends ``prompt_len`` keys, each decode step one more, and the
+        LAST generated token never appends (its key is never attended)."""
+        if not self.paged:
+            return 0
+        return -(-(prompt_len + max_new - 1) // self.page_size)
+
+    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None,
+               deadline_s: float | None = None) -> int:
         """Enqueue one generation request; returns its request id.  The
         prompt is a 1-D sequence of token ids; admission happens at the next
-        ``step()``/``run()`` when a slot is free."""
+        ``step()``/``run()`` when a slot is free.  ``deadline_s`` bounds the
+        request's total wall-clock lifetime (queue wait included): past it,
+        the request fails with whatever tokens it has.
+
+        Requests that can NEVER be served — prompt + budget over ``max_len``
+        or over the whole physical page pool — are rejected here, up front,
+        with an actionable error.  (This is also what makes head-of-line
+        admission safe: a queued request always fits EVENTUALLY.)"""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -261,21 +322,89 @@ class ServePool:
                 f"prompt ({prompt.size} tokens) + max_new_tokens "
                 f"({max_new_tokens}) exceeds the pool max_len "
                 f"({self.max_len}); raise max_len or shorten the request")
+        need = self._need_pages(prompt.size, max_new_tokens)
+        if need > self._total_pages:
+            raise ValueError(
+                f"request needs {need} KV pages (prompt {prompt.size} + "
+                f"max_new_tokens {max_new_tokens} at page_size "
+                f"{self.page_size}) but the physical pool only holds "
+                f"{self._total_pages}; raise pool_pages or shorten the "
+                f"request")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s={deadline_s} must be positive")
         rid = self._next_rid
         self._next_rid += 1
-        self._requests[rid] = Request(rid, prompt, max_new_tokens, eos_id)
+        self._requests[rid] = Request(rid, prompt, max_new_tokens, eos_id,
+                                      deadline_s=deadline_s,
+                                      submitted_at=time.monotonic())
         self._queue.append(rid)
         return rid
 
+    def request(self, rid: int) -> Request:
+        """The tracked request (status/error/tokens) for ``rid``."""
+        return self._requests[rid]
+
     def _finish(self, req: Request):
         req.done = True
+        req.status = "done"
+        self._release_reservation(req)
         self._completed += 1
+
+    def _fail(self, req: Request, error: str):
+        """Terminal per-request failure: the pool keeps serving everyone
+        else; the partial output stays on the request."""
+        req.status = "failed"
+        req.error = error
+        self._release_reservation(req)
+        self._failed += 1
+        self._failures.append({"rid": req.rid, "slot": req.slot,
+                               "error": error})
+
+    def _release_reservation(self, req: Request):
+        self._reserved_pages -= req.pages_reserved
+        req.pages_reserved = 0
+
+    def _release_slot(self, slot: int):
+        """Free pool slot ``slot`` (pages back to the pool for paged
+        caches); the next admission recycles it."""
+        self._slot_rid[slot] = None
+        if self.paged:
+            self._cache = self._free(self._cache, jnp.int32(slot))
+
+    def _expired(self, req: Request) -> bool:
+        return (req.deadline_s is not None
+                and time.monotonic() - req.submitted_at > req.deadline_s)
+
+    def _expire(self):
+        """Fail queued and live requests past their deadline."""
+        if any(self._requests[r].deadline_s is not None
+               for r in self._queue) or any(
+                   r is not None and self._requests[r].deadline_s is not None
+                   for r in self._slot_rid):
+            keep = collections.deque()
+            for rid in self._queue:
+                req = self._requests[rid]
+                if self._expired(req):
+                    self._fail(req, f"deadline ({req.deadline_s}s) expired "
+                               "before admission")
+                else:
+                    keep.append(rid)
+            self._queue = keep
+            for slot, rid in enumerate(self._slot_rid):
+                if rid is None:
+                    continue
+                req = self._requests[rid]
+                if self._expired(req):
+                    self._fail(req, f"deadline ({req.deadline_s}s) expired "
+                               f"after {len(req.tokens)} tokens")
+                    self._release_slot(slot)
 
     def _admit_one(self, slot: int, req: Request):
         """Prefill the prompt at batch 1 and scatter its cache rows into
         ``slot``.  The prefill's last-position logits yield the tenant's
         FIRST generated token (mirror of ``ServeHandle.generate``)."""
         t0 = time.perf_counter()
+        req.slot = slot
         batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
         logits, cache1 = self._prefill1(self._sparams, batch,
                                         self._cache1_template)
@@ -285,11 +414,30 @@ class ServePool:
         if req.max_new_tokens == 1 or first == req.eos_id:
             self._finish(req)       # never occupies the slot
         else:
+            req.status = "live"
             self._slot_rid[slot] = req.rid
             self._last_tok[slot, 0] = first
             self._cache = self._adopt(self._cache, cache1,
                                       jnp.int32(slot))
         self._admit_seconds += time.perf_counter() - t0
+
+    def _admission_blocked(self, req: Request) -> bool:
+        """Page backpressure: deny admission while the head request's
+        worst-case reservation does not fit the unreserved remainder of the
+        pool.  Head-of-line blocking is deliberate (FIFO fairness) and safe:
+        ``submit`` already rejected anything that can never fit, so the head
+        clears as live tenants finish and release their reservations."""
+        if not self.paged:
+            return False
+        need = self._need_pages(req.prompt.size, req.max_new_tokens)
+        denied = (self._reserved_pages + need > self._total_pages
+                  or faults.page_admission_denied())
+        if denied:
+            req.admit_denials += 1
+        else:
+            req.pages_reserved = need
+            self._reserved_pages += need
+        return denied
 
     def _admit(self):
         # keep scanning: an admission that finishes instantly (one-token
@@ -301,10 +449,22 @@ class ServePool:
             for slot in range(self.slots):
                 if not self._queue:
                     return
-                if self._slot_rid[slot] is None:
-                    self._admit_one(slot,
-                                    self._requests[self._queue.popleft()])
-                    progressed = True
+                if self._slot_rid[slot] is not None:
+                    continue
+                req = self._requests[self._queue[0]]
+                if self._admission_blocked(req):
+                    if req.admit_denials > self.admission_retry_limit:
+                        self._queue.popleft()
+                        self._fail(req, "page-pool admission denied "
+                                   f"{req.admit_denials} times "
+                                   "(admission_retry_limit="
+                                   f"{self.admission_retry_limit})")
+                        progressed = True
+                    # else: leave the head queued; a later step retries
+                    break
+                self._queue.popleft()
+                self._admit_one(slot, req)
+                progressed = True
 
     # ---- decode ----
 
@@ -319,17 +479,35 @@ class ServePool:
         return len(self._queue)
 
     def step(self) -> int:
-        """Admit whatever fits, then run ONE batched decode step over all
-        slots.  Returns the number of live slots that advanced (0 means the
-        pool is drained)."""
+        """Expire deadline-blown requests, admit whatever fits, then run ONE
+        batched decode step over all slots.  Returns the number of live
+        slots that advanced (0 means the pool is drained).
+
+        NaN/inf quarantine (``guard_logits``): a live slot whose logits row
+        went non-finite fails ALONE — no token is appended for it, its slot
+        and pages are freed, and every healthy slot's argmax is taken from
+        the same logit values it would see in a fault-free run (token
+        parity is asserted in tests/test_resilience.py)."""
+        self._expire()
         self._admit()
         if self.live == 0:
             return 0
         t0 = time.perf_counter()
-        tok, _, self._cache = self._decode(self._sparams,
-                                           jnp.asarray(self._last_tok),
-                                           self._cache)
-        tok_host = np.asarray(tok)
+        tok, logits, self._cache = self._decode(self._sparams,
+                                                jnp.asarray(self._last_tok),
+                                                self._cache)
+        # chaos: NaN-poison one slot's logits at the chosen decode step
+        # (host-side copy — device values and healthy slots are untouched)
+        corrupted = faults.corrupt_decode_logits(logits, self._decode_steps)
+        if corrupted is not None:
+            finite = np.isfinite(corrupted).all(
+                axis=tuple(range(1, corrupted.ndim)))
+            tok_host = np.argmax(corrupted[:, -1], axis=-1
+                                 ).astype(np.int32)[:, None]
+        else:
+            finite = (np.asarray(self._finite(logits))
+                      if self.guard_logits else None)
+            tok_host = np.asarray(tok)
         self._decode_seconds += time.perf_counter() - t0
         self._decode_steps += 1
         advanced = 0
@@ -338,22 +516,46 @@ class ServePool:
                 continue
             advanced += 1
             req = self._requests[rid]
+            if finite is not None and not finite[slot]:
+                self._fail(req, "non-finite logits at decode step "
+                           f"{self._decode_steps - 1} (slot {slot} "
+                           "quarantined)")
+                self._release_slot(slot)
+                continue            # no token appended for the bad slot
             t = int(tok_host[slot, 0])
             req.tokens.append(t)
             self._tokens_generated += 1
             self._last_tok[slot, 0] = t
             if len(req.tokens) >= req.max_new_tokens or t == req.eos_id:
                 self._finish(req)
-                self._slot_rid[slot] = None   # recycled at next admission
-                if self.paged:                # pages back to the pool NOW
-                    self._cache = self._free(self._cache, jnp.int32(slot))
+                self._release_slot(slot)  # recycled at next admission
         self._live_slot_steps += advanced
         return advanced
 
-    def run(self) -> dict[int, np.ndarray]:
-        """Drain the pool: step until every submitted request completed.
-        Returns {rid: generated token ids} for ALL finished requests."""
+    def run(self, budget_s: float | None = None) -> dict[int, np.ndarray]:
+        """Drain the pool: step until every submitted request completed (or
+        failed).  Returns {rid: generated token ids} for ALL successfully
+        finished requests; failures are on ``request(rid)`` / ``stats()``.
+
+        ``budget_s`` bounds the WHOLE drain's wall clock: past it, every
+        still-queued/live request fails with its partial output and the
+        call returns what completed in time."""
+        t0 = time.monotonic()
         while self._queue or self.live > 0:
+            if budget_s is not None and time.monotonic() - t0 > budget_s:
+                for rid in list(self._queue):
+                    self._fail(self._requests[rid],
+                               f"pool wall-clock budget ({budget_s}s) "
+                               "exhausted before admission")
+                self._queue.clear()
+                for slot, rid in enumerate(self._slot_rid):
+                    if rid is not None:
+                        req = self._requests[rid]
+                        self._fail(req, "pool wall-clock budget "
+                                   f"({budget_s}s) exhausted after "
+                                   f"{len(req.tokens)} tokens")
+                        self._release_slot(slot)
+                break
             if self.step() == 0 and not self._queue:
                 break
         return {rid: r.output for rid, r in self._requests.items()
@@ -371,10 +573,15 @@ class ServePool:
             pages = int(self._cache["k_pages"].shape[1])
             used = pages - int(jax.device_get(self._cache["free_count"][0]))
             page_pool = {"pages": pages, "used": used,
+                         "reserved": self._reserved_pages,
                          "page_size": self.page_size,
                          "occupancy": used / pages}
+        from repro.kernels import decode_attention as DA
         return {
             "page_pool": page_pool,
+            "failed": self._failed,
+            "failures": list(self._failures),
+            "flash_fallbacks": DA.FALLBACKS,
             "slots": self.slots,
             "max_len": self.max_len,
             "mesh": None if self.mesh is None else

@@ -150,6 +150,8 @@ class Session:
         out = s.serve(8, 64).generate(batch, num_tokens=16)
         pool = s.serve_pool(slots=4, max_len=64)   # multi-tenant decode
         print(s.report())                      # rho, reductions, pool stats
+        s.save("runs/s1")                      # full-session persistence
+        s2 = Session.restore("runs/s1")        # serves token-identically
     """
 
     def __init__(self, cfg: ModelConfig, params, axes=None):
@@ -391,13 +393,21 @@ class Session:
                 eval_fn: Callable | None = None,
                 loss_fn: Callable | None = None,
                 batch_fn: Callable | None = None, weight_cache: bool = True,
+                ckpt_dir: str | None = None,
                 verbose: bool = False) -> list:
         """Dimension squeezing (paper Algorithm 2): repeatedly truncate the
         least-error bond, re-tune the auxiliary tensors, stop when the metric
         gap exceeds ``delta``.  Every evaluation runs on a freshly contracted
         weight snapshot (``weight_cache=True``), and any serving snapshot
         taken before this call is invalidated — a post-squeeze ``serve``
-        always re-densifies from the squeezed cores."""
+        always re-densifies from the squeezed cores.
+
+        ``ckpt_dir`` journals every ACCEPTED iteration (params + history +
+        the stop rule's baseline metric) through
+        ``resilience.SqueezeJournal``: a preempted run re-invoked with the
+        same ``ckpt_dir`` resumes at the last completed iteration and
+        reproduces the uninterrupted run's history and final params exactly
+        (asserted in tests/test_resilience.py)."""
         t0 = time.perf_counter()
         loss_fn = loss_fn or self._default_loss_fn()
         batch_fn = batch_fn or self._default_batch_fn(seq_len, batch_size,
@@ -405,6 +415,13 @@ class Session:
         if eval_fn is None:
             eval_fn = lambda p: self.evaluate(
                 p, loss_fn=loss_fn, batch_fn=batch_fn)
+        journal, start_iter, init_hist, baseline = None, 0, None, None
+        if ckpt_dir:
+            from repro.resilience.journal import SqueezeJournal  # lazy
+            journal = SqueezeJournal(ckpt_dir)
+            resumed = journal.load(self.params)
+            if resumed is not None:
+                self.params, start_iter, init_hist, baseline = resumed
         rho0 = squeeze_mod.model_compression_ratio(self.params)
 
         def finetune_fn(p):
@@ -416,7 +433,10 @@ class Session:
             self.params, finetune_fn, eval_fn, delta=delta,
             max_iters=max_iters, step=step, min_bond=min_bond,
             verbose=verbose,
-            weight_cache=self.engine.cache_weights if weight_cache else None)
+            weight_cache=self.engine.cache_weights if weight_cache else None,
+            start_iter=start_iter, initial_history=init_hist,
+            baseline_metric=baseline,
+            on_iteration=journal.record if journal else None)
         self._bump()
         self.squeeze_history.extend(history)
         self._record("squeeze", t0, {
@@ -494,7 +514,9 @@ class Session:
     def serve_pool(self, slots: int, max_len: int, *,
                    weight_cache: bool = True, mesh=None,
                    rules: dict | None = None, paged: bool = False,
-                   page_size: int = 16):
+                   page_size: int = 16, pool_pages: int | None = None,
+                   admission_retry_limit: int = 1000,
+                   guard_logits: bool = True):
         """Multi-tenant batched decode over the CURRENT weights: a
         ``pipeline.scheduler.ServePool`` with ``slots`` decode rows.
         Independent requests are admitted into free slots (batch-1 prefill
@@ -504,7 +526,13 @@ class Session:
 
         Like ``serve()``, the pool snapshots the weights at construction
         (``mesh=`` places them on a device mesh); build a new pool after
-        any ``finetune``/``squeeze``.  Example::
+        any ``finetune``/``squeeze``.
+
+        Degradation knobs (docs/resilience.md): ``pool_pages``
+        oversubscribes the paged KV pool (admission then backpressures on
+        page reservations instead of crashing), ``guard_logits`` quarantines
+        a slot whose logits go NaN/inf, ``admission_retry_limit`` bounds the
+        backpressure retries before a request fails.  Example::
 
             pool = session.serve_pool(slots=4, max_len=64)
             rids = [pool.submit(p, max_new_tokens=16) for p in prompts]
@@ -521,13 +549,45 @@ class Session:
                          weight_cache=weight_cache, mesh=mesh, rules=rules,
                          axes=self.axes if mesh is not None else None,
                          version=self._version, paged=paged,
-                         page_size=page_size)
+                         page_size=page_size, pool_pages=pool_pages,
+                         admission_retry_limit=admission_retry_limit,
+                         guard_logits=guard_logits)
         self._pools = [r for r in self._pools if r() is not None]
         self._pools.append(weakref.ref(pool))
         self._record("serve", t0, {"pool": True, "slots": slots,
                                    "max_len": max_len,
                                    "init_seconds": pool.init_seconds})
         return pool
+
+    # ---- persistence ----
+
+    def save(self, directory: str) -> str:
+        """Persist the FULL session under ``directory`` — weights (atomic
+        ``CheckpointManager`` step dirs), stage records, squeeze history,
+        trainability mask, conversion report, weights version, and the
+        autotuner's verdicts — behind one atomically-written manifest
+        (``resilience.state``): a crash at any point leaves the directory
+        at either the previous complete session or the new one.  Returns
+        the directory.  Example::
+
+            session.save("runs/compressed")
+            ...                              # preemption / new process
+            s = Session.restore("runs/compressed")
+            s.serve(8, 64)                   # token-identical serving
+        """
+        from repro.resilience import state as rstate  # lazy
+        return rstate.save_session(self, directory)
+
+    @classmethod
+    def restore(cls, directory: str) -> "Session":
+        """Rebuild a session from ``save(directory)``: the model/axes come
+        from the serialized config, weights from the manifest's checkpoint
+        step (through the ``latest``-symlink crash-consistency contract),
+        and the lifecycle state (stage, records, squeeze history, mask,
+        weights version) from the manifest — so the restored session
+        reports and serves exactly like the one that was saved."""
+        from repro.resilience import state as rstate  # lazy
+        return rstate.restore_session(directory, cls=cls)
 
     # ---- report ----
 

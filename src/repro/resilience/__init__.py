@@ -1,0 +1,60 @@
+"""Fault-tolerant lifecycle: session save/restore, squeeze journaling, and
+deterministic fault injection.
+
+Three pieces (see ``docs/resilience.md`` for the durability model and the
+fault matrix):
+
+* ``resilience.faults`` — a deterministic chaos harness: ``FaultPlan``
+  names where/when faults fire (preemption at step k, crash before the
+  ``latest`` symlink flip, transient I/O errors, NaN logits at a chosen
+  decode step, page-pool exhaustion, Pallas kernel failure); activated via
+  ``fault_scope`` or the pipeline CLI's ``--chaos`` flag.
+* ``resilience.state`` — the atomic manifest behind ``Session.save`` /
+  ``Session.restore`` (weights + stage records + squeeze history + mask +
+  tuner verdicts, crash-consistent end to end).
+* ``resilience.journal`` — per-iteration journaling for Algorithm 2 so a
+  preempted squeeze resumes at the last completed iteration
+  (``Session.squeeze(ckpt_dir=...)``).
+
+``faults`` is imported eagerly (stdlib-only, and the instrumented sites in
+``checkpoint``/``train``/``core`` need it cheap); the heavier state/journal
+modules resolve lazily to keep import edges acyclic.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.resilience.faults import (CrashPoint, FaultPlan,  # noqa: F401
+                                     InjectedIOError, InjectedKernelError,
+                                     Preemption, fault_scope)
+
+__all__ = [
+    "FaultPlan", "fault_scope", "Preemption", "CrashPoint",
+    "InjectedIOError", "InjectedKernelError",
+    "SqueezeJournal", "save_session", "restore_session",
+    "faults", "journal", "state",
+]
+
+_LAZY = {
+    "SqueezeJournal": ("repro.resilience.journal", "SqueezeJournal"),
+    "save_session": ("repro.resilience.state", "save_session"),
+    "restore_session": ("repro.resilience.state", "restore_session"),
+    "journal": ("repro.resilience.journal", None),
+    "state": ("repro.resilience.state", None),
+}
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(
+            f"module 'repro.resilience' has no attribute {name!r}")
+    module = importlib.import_module(target[0])
+    value = module if target[1] is None else getattr(module, target[1])
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

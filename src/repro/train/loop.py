@@ -10,6 +10,7 @@ from typing import Callable
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.resilience import faults
 from repro.train.steps import TrainState
 
 
@@ -41,6 +42,15 @@ def run_training(train_step: Callable, state: TrainState,
     history = []
     t0 = time.time()
     for step in range(start, loop.steps):
+        try:
+            faults.step_tick("finetune", step)  # chaos: preemption-at-step-k
+        except faults.Preemption:
+            if mgr:
+                # SIGTERM drain: persist the completed-steps state so resume
+                # restarts HERE, not at the last periodic checkpoint
+                mgr.save(step, state, block=True)
+                log_fn(f"[loop] preempted at step {step}; state saved")
+            raise
         batch = to_device(batch_fn(step))
         state, metrics = train_step(state, batch)
         if (step + 1) % loop.log_every == 0 or step == start:

@@ -109,7 +109,8 @@ def make_eval_step(model: Model, loss_fn: Callable | None = None):
 
 def make_serve_steps(model: Model, *, weight_cache: bool = True,
                      mesh=None, rules: dict | None = None, axes=None,
-                     paged: bool = False, page_size: int = 16):
+                     paged: bool = False, page_size: int = 16,
+                     pool_pages: int | None = None):
     """(prefill_step, decode_step, init_serve) for batched serving.
 
     ``paged=True`` allocates the PAGED KV cache
@@ -118,7 +119,10 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True,
     ``kernels.decode_attention`` (flash kernel vs XLA gather, raced by the
     measured autotuner) — see docs/serving.md "Decode attention & paged
     KV".  The step functions themselves are unchanged; the cache pytree
-    carries the paging state.
+    carries the paging state.  ``pool_pages`` oversubscribes the physical
+    page pool below the ``batch * max_pages`` worst case — only meaningful
+    behind ``ServePool``'s page-reservation admission (docs/resilience.md),
+    which queues requests instead of letting the free list underflow.
 
     ``init_serve(params, batch, max_len)`` runs ONCE per serving session: it
     allocates the KV cache (per-slot positions — see
@@ -163,6 +167,8 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True,
     """
 
     cache_kw = {"paged": True, "page_size": page_size} if paged else {}
+    if paged and pool_pages is not None:
+        cache_kw["pool_pages"] = pool_pages
 
     def init_serve(params, batch: int, max_len: int):
         cache = model.init_cache(batch, max_len, **cache_kw)

@@ -1,0 +1,452 @@
+"""Chaos suite: the fault-tolerant lifecycle under deterministic fault
+injection (``resilience.faults``).
+
+Covers the ISSUE's acceptance criteria end to end:
+
+* checkpoint crash-consistency — a kill mid-write or between the step-dir
+  publish and the ``latest`` symlink flip restores the PREVIOUS intact
+  checkpoint; transient I/O errors are retried; async-save errors surface;
+* a Session preempted mid-squeeze resumes from the journal and completes
+  with history/params/compression identical to an uninterrupted run;
+* full-session save/restore round-trips (token-identical serving);
+* ServePool graceful degradation — NaN quarantine fails one slot while the
+  healthy requests finish token-identically; an oversubscribed page pool
+  backpressures (token-identical drain) instead of corrupting; deadlines,
+  wall-clock budgets, and flash->XLA fallback;
+* the CLI's ``--chaos`` / ``--session-dir`` / tune-export/import surface.
+"""
+
+import io
+import json
+import os
+import warnings
+from contextlib import redirect_stderr, redirect_stdout
+
+import jax
+import numpy as np
+import pytest
+
+from repro import Session
+from repro.checkpoint.manager import CheckpointManager
+from repro.resilience import faults
+from repro.resilience.journal import SqueezeJournal
+
+
+def _tree(scale=1.0):
+    return {"a": np.arange(6.0).reshape(2, 3) * scale,
+            "b": np.ones(4, np.int32)}
+
+
+def _trees_equal(t1, t2) -> bool:
+    eq = jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()), t1, t2)
+    return all(jax.tree.leaves(eq))
+
+
+# --------------------------------------------------------------------------
+# FaultPlan surface
+# --------------------------------------------------------------------------
+
+
+def test_fault_plan_parse():
+    plan = faults.FaultPlan.parse(
+        ["preempt-squeeze:2", "io:ckpt:3", "nan-decode:1:0",
+         "deny-pages:2", "flash-raise", "crash-ckpt:pre_latest:5"])
+    assert plan.preempt_squeeze_iter == 2
+    assert plan.io_errors == {"ckpt": 3}
+    assert plan.nan_decode_step == 1 and plan.nan_decode_slot == 0
+    assert plan.deny_page_admissions == 2
+    assert plan.flash_raises
+    assert plan.crash_ckpt == "pre_latest" and plan.crash_ckpt_step == 5
+
+
+@pytest.mark.parametrize("spec", ["bogus:1", "crash-ckpt:nowhere",
+                                  "preempt-squeeze", "io:ckpt"])
+def test_fault_plan_parse_rejects(spec):
+    with pytest.raises(ValueError, match="chaos spec"):
+        faults.FaultPlan.parse([spec])
+
+
+def test_checks_are_noops_without_plan():
+    faults.step_tick("finetune", 0)
+    faults.crash_point("ckpt:pre_latest", 1)
+    faults.io_check("ckpt")
+    faults.check_flash()
+    assert faults.corrupt_decode_logits(np.zeros((2, 1, 4)), 0) is None
+    assert not faults.page_admission_denied()
+
+
+# --------------------------------------------------------------------------
+# checkpoint crash-consistency (satellite: crash-consistent restore)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("site", ["mid_write", "pre_latest"])
+def test_crash_mid_save_restores_previous(tmp_path, site):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, async_save=False)
+    mgr.save(1, _tree(), block=True)
+    with faults.fault_scope(faults.FaultPlan(crash_ckpt=site)):
+        with pytest.raises(faults.CrashPoint):
+            mgr.save(2, _tree(2.0), block=True)
+    # a fresh manager (fresh process) restores the PREVIOUS intact step
+    # through the latest symlink — even though (pre_latest) step_2 was
+    # fully published but never linked
+    m2 = CheckpointManager(d, async_save=False)
+    if site == "pre_latest":
+        assert os.path.isdir(os.path.join(d, "step_2"))
+    assert m2.latest_step() == 1
+    restored, meta = m2.restore(None, _tree())
+    assert meta["step"] == 1 and _trees_equal(restored, _tree())
+    # rerunning the save completes and flips latest forward
+    m2.save(2, _tree(2.0), block=True)
+    assert m2.latest_step() == 2
+
+
+def test_transient_io_retried_then_exhausted(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ok"), async_save=False,
+                            io_backoff=0.001)
+    with faults.fault_scope(faults.FaultPlan(io_errors={"ckpt": 2})):
+        mgr.save(1, _tree(), block=True)      # retries absorb both faults
+    assert mgr.latest_step() == 1
+    m2 = CheckpointManager(str(tmp_path / "bad"), async_save=False,
+                           io_retries=1, io_backoff=0.001)
+    with faults.fault_scope(faults.FaultPlan(io_errors={"ckpt": 50})):
+        with pytest.raises(OSError):
+            m2.save(1, _tree(), block=True)   # budget exhausted -> surfaces
+
+
+def test_async_saves_serialize_and_propagate_errors(tmp_path):
+    # regression: overlapping async saves must join the in-flight writer
+    # (two writers on the same dir tree was a corruption race)
+    mgr = CheckpointManager(str(tmp_path), keep=3, io_backoff=0.001)
+    for i in range(5):
+        mgr.save(i, _tree(float(i + 1)))
+    mgr.wait()
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [2, 3, 4]       # keep-k GC ran
+    restored, _ = mgr.restore(None, _tree())
+    assert _trees_equal(restored, _tree(5.0))
+    # an async save that failed re-raises on wait(), not silently
+    m2 = CheckpointManager(str(tmp_path), io_retries=0)
+    with faults.fault_scope(faults.FaultPlan(io_errors={"ckpt": 1})):
+        m2.save(10, _tree())
+        with pytest.raises(OSError):
+            m2.wait()
+    m2.save(11, _tree(), block=True)          # manager stays usable after
+
+
+# --------------------------------------------------------------------------
+# lifecycle resume (tentpole: journaled squeeze, preempted finetune)
+# --------------------------------------------------------------------------
+
+
+SQUEEZE_KW = dict(delta=0.5, max_iters=3, finetune_steps=2, seq_len=8,
+                  batch_size=4)
+
+
+@pytest.fixture(scope="module")
+def cls_session_factory():
+    def make():
+        return Session.init("albert-base", num_classes=2)
+    return make
+
+
+def test_preempted_squeeze_resumes_identically(tmp_path, cls_session_factory):
+    from repro.core import squeeze as squeeze_mod
+    # uninterrupted reference
+    ref = cls_session_factory()
+    ref_hist = ref.squeeze(**SQUEEZE_KW)
+    # preempt at iteration 1, journal in tmp_path
+    jdir = str(tmp_path / "journal")
+    s = cls_session_factory()
+    with faults.fault_scope(faults.FaultPlan(preempt_squeeze_iter=1)):
+        with pytest.raises(faults.Preemption):
+            s.squeeze(ckpt_dir=jdir, **SQUEEZE_KW)
+    # the journal holds exactly the completed iterations
+    assert SqueezeJournal(jdir).load(s.params) is not None
+    # resume: identical history, identical params, identical rho
+    hist = s.squeeze(ckpt_dir=jdir, **SQUEEZE_KW)
+    assert hist == ref_hist
+    assert _trees_equal(s.params, ref.params)
+    assert (squeeze_mod.model_compression_ratio(s.params)
+            == squeeze_mod.model_compression_ratio(ref.params))
+
+
+def test_preempted_finetune_saves_and_resumes(tmp_path):
+    ck = str(tmp_path / "ck")
+    kw = dict(steps=4, seq_len=8, batch_size=2, ckpt_every=100)
+    ref = Session.init("qwen3-14b")
+    ref.finetune(**kw)
+    s = Session.init("qwen3-14b")
+    with faults.fault_scope(faults.FaultPlan(preempt_finetune_step=2)):
+        with pytest.raises(faults.Preemption):
+            s.finetune(ckpt_dir=ck, **kw)
+    # the SIGTERM-drain save: resume restarts at the preempted step, not
+    # at the last periodic checkpoint (ckpt_every=100 wrote none)
+    assert CheckpointManager(ck).latest_step() == 2
+    s.finetune(ckpt_dir=ck, **kw)
+    assert _trees_equal(s.params, ref.params)
+
+
+# --------------------------------------------------------------------------
+# full-session save/restore (tentpole)
+# --------------------------------------------------------------------------
+
+
+def test_session_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "sess")
+    s = Session.init("qwen3-14b")
+    s.finetune(steps=2, seq_len=8, batch_size=2)
+    s.save(d)
+    assert os.path.exists(os.path.join(d, "session.json"))
+    s2 = Session.restore(d)
+    assert s2.stage == s.stage
+    assert s2.weights_version == s.weights_version
+    assert s2._records == s._records
+    assert _trees_equal(s2.params, s.params)
+    assert _trees_equal(s2.mask, s.mask)        # bools survive the manifest
+    # token-identical serving from the restored session
+    prompts = {"tokens": np.arange(8, dtype=np.int32)[None].repeat(2, 0)}
+    out1 = np.asarray(s.serve(2, 24).generate(prompts, 4))
+    out2 = np.asarray(s2.serve(2, 24).generate(prompts, 4))
+    assert (out1 == out2).all()
+
+
+def test_restore_missing_and_bad_format(tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        Session.restore(str(tmp_path / "nope"))
+    d = tmp_path / "bad"
+    d.mkdir()
+    (d / "session.json").write_text(json.dumps({"format": 999}))
+    with pytest.raises(ValueError, match="format"):
+        Session.restore(str(d))
+
+
+# --------------------------------------------------------------------------
+# ServePool graceful degradation (tentpole)
+# --------------------------------------------------------------------------
+
+
+POOL_KW = dict(slots=2, max_len=32, paged=True, page_size=8)
+PROMPTS = [np.arange(1, 6, dtype=np.int32),
+           np.arange(2, 7, dtype=np.int32),
+           np.arange(3, 8, dtype=np.int32)]
+
+
+@pytest.fixture(scope="module")
+def lm_session():
+    return Session.init("qwen3-14b")
+
+
+@pytest.fixture(scope="module")
+def fault_free(lm_session):
+    pool = lm_session.serve_pool(**POOL_KW)
+    rids = [pool.submit(p, 6) for p in PROMPTS]
+    return {r: pool.run()[r] for r in rids}
+
+
+def test_nan_quarantine_spares_healthy_slots(lm_session, fault_free):
+    with faults.fault_scope(faults.FaultPlan(nan_decode_step=1,
+                                             nan_decode_slot=0)):
+        pool = lm_session.serve_pool(**POOL_KW)
+        rids = [pool.submit(p, 6) for p in PROMPTS]
+        out = pool.run()
+    st = pool.stats()
+    assert st["failed"] == 1 and len(st["failures"]) == 1
+    bad = st["failures"][0]
+    assert bad["slot"] == 0 and "non-finite" in bad["error"]
+    req = pool.request(bad["rid"])
+    assert req.status == "failed" and not req.done
+    # the quarantined request is NOT in run()'s output; every healthy
+    # request's tokens are bit-identical to the fault-free run
+    assert bad["rid"] not in out
+    for rid in rids:
+        if rid != bad["rid"]:
+            assert pool.request(rid).status == "done"
+            assert (out[rid] == fault_free[rid]).all()
+
+
+def test_oversubscribed_pool_backpressures(lm_session, fault_free):
+    # 3 pages can hold ONE worst-case request (ceil(10/8)=2 pages) plus
+    # change — admission must queue, not underflow the free list
+    pool = lm_session.serve_pool(pool_pages=3, **POOL_KW)
+    rids = [pool.submit(p, 6) for p in PROMPTS]
+    out = pool.run()
+    assert pool.stats()["failed"] == 0
+    for rid in rids:
+        assert (out[rid] == fault_free[rid]).all()
+    assert pool.stats()["page_pool"]["reserved"] == 0   # all released
+
+
+def test_injected_page_denials_retry_then_succeed(lm_session, fault_free):
+    with faults.fault_scope(faults.FaultPlan(deny_page_admissions=2)):
+        pool = lm_session.serve_pool(**POOL_KW)
+        rids = [pool.submit(p, 6) for p in PROMPTS]
+        out = pool.run()
+    assert pool.stats()["failed"] == 0
+    assert pool.request(rids[0]).admit_denials > 0
+    for rid in rids:
+        assert (out[rid] == fault_free[rid]).all()
+
+
+def test_admission_retry_limit_fails_request(lm_session):
+    with faults.fault_scope(faults.FaultPlan(deny_page_admissions=10 ** 6)):
+        pool = lm_session.serve_pool(admission_retry_limit=3, **POOL_KW)
+        rid = pool.submit(PROMPTS[0], 6)
+        out = pool.run()
+    assert out == {}
+    req = pool.request(rid)
+    assert req.status == "failed" and "admission denied" in req.error
+
+
+def test_never_fitting_request_rejected_at_submit(lm_session):
+    pool = lm_session.serve_pool(pool_pages=2, **POOL_KW)
+    with pytest.raises(ValueError, match="pages"):
+        pool.submit(np.arange(20, dtype=np.int32), 10)
+    with pytest.raises(ValueError, match="max_len"):
+        pool.submit(np.arange(30, dtype=np.int32), 10)
+    with pytest.raises(ValueError, match="deadline"):
+        pool.submit(PROMPTS[0], 4, deadline_s=0)
+
+
+def test_deadline_expires_queued_request(lm_session):
+    pool = lm_session.serve_pool(slots=1, max_len=32, paged=True,
+                                 page_size=8)
+    ok = pool.submit(PROMPTS[0], 4)
+    dead = pool.submit(PROMPTS[1], 4, deadline_s=1e-9)
+    out = pool.run()
+    assert ok in out and dead not in out
+    assert pool.request(dead).status == "failed"
+    assert "deadline" in pool.request(dead).error
+
+
+def test_wall_clock_budget_fails_leftovers(lm_session):
+    pool = lm_session.serve_pool(slots=1, max_len=32, paged=True,
+                                 page_size=8)
+    rids = [pool.submit(p, 6) for p in PROMPTS]
+    out = pool.run(budget_s=0.0)
+    assert out == {}
+    assert pool.stats()["failed"] == len(rids)
+    assert all("budget" in f["error"] for f in pool.stats()["failures"])
+
+
+def test_flash_failure_degrades_to_xla(lm_session, fault_free, monkeypatch):
+    from repro.kernels import decode_attention as DA
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "flash")
+    before = DA.FALLBACKS
+    with faults.fault_scope(faults.FaultPlan(flash_raises=True)):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            pool = lm_session.serve_pool(**POOL_KW)
+            rids = [pool.submit(p, 6) for p in PROMPTS]
+            out = pool.run()
+    assert DA.FALLBACKS > before                # the kernel DID raise
+    assert pool.stats()["flash_fallbacks"] >= DA.FALLBACKS
+    for rid in rids:                            # gather path is bit-identical
+        assert (out[rid] == fault_free[rid]).all()
+
+
+def test_pool_pages_requires_paged(lm_session):
+    with pytest.raises(ValueError, match="paged"):
+        lm_session.serve_pool(slots=2, max_len=32, pool_pages=4)
+
+
+def test_init_cache_pool_pages_bounds():
+    from repro.models import transformer
+    s = Session.init("qwen3-14b")
+    cache = transformer.init_cache(s.cfg, 2, 32, paged=True, page_size=8,
+                                   pool_pages=3)
+    assert cache["k_pages"].shape[1] == 3
+    with pytest.raises(ValueError, match="pool_pages"):
+        transformer.init_cache(s.cfg, 2, 32, paged=True, page_size=8,
+                               pool_pages=9)     # > batch * max_pages
+    with pytest.raises(ValueError, match="pool_pages"):
+        transformer.init_cache(s.cfg, 2, 32, paged=True, page_size=8,
+                               pool_pages=0)
+
+
+# --------------------------------------------------------------------------
+# fleet warm-start (satellite: tune-export / tune-import)
+# --------------------------------------------------------------------------
+
+
+def test_tune_export_import_roundtrip(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+    src_cache = tmp_path / "src.json"
+    dst_cache = tmp_path / "dst.json"
+    artifact = str(tmp_path / "pack.json")
+    ent = lambda mode: {"mode": mode, "block_m": 256}
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(src_cache))
+    autotune.reset_tuner(str(src_cache))
+    try:
+        autotune._write_cache(str(src_cache), {"k1": ent("kernel"),
+                                               "k2": ent("flash")})
+        res = autotune.export_cache(artifact)
+        assert res["exported"] == 2
+        with open(artifact) as f:
+            pack = json.load(f)
+        assert pack["version"] == autotune.CACHE_VERSION
+        # import into a different host's cache: local verdicts win
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(dst_cache))
+        autotune.reset_tuner(str(dst_cache))
+        autotune._write_cache(str(dst_cache), {"k1": ent("xla")})
+        res = autotune.import_cache(artifact)
+        assert res["imported"] == 1 and res["skipped"] == 1
+        merged = autotune._read_cache(str(dst_cache))
+        assert merged["k1"] == ent("xla")               # local won
+        assert merged["k2"] == ent("flash")             # imported
+        # overwrite=True lets the artifact win
+        autotune.import_cache(artifact, overwrite=True)
+        assert autotune._read_cache(str(dst_cache))["k1"] == ent("kernel")
+    finally:
+        autotune.reset_tuner()
+
+
+def test_tune_cli_roundtrip(tmp_path, monkeypatch, capsys):
+    from repro.kernels import autotune
+    from repro.pipeline.cli import main
+    cache = tmp_path / "cache.json"
+    artifact = str(tmp_path / "pack.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    autotune.reset_tuner(str(cache))
+    try:
+        autotune._write_cache(str(cache),
+                              {"k": {"mode": "kernel", "block_m": 256}})
+        assert main(["tune-export", artifact]) == 0
+        assert main(["tune-import", artifact]) == 0
+        out = capsys.readouterr().out
+        assert "1 verdicts" in out and "skipped" in out
+    finally:
+        autotune.reset_tuner()
+
+
+# --------------------------------------------------------------------------
+# CLI chaos surface
+# --------------------------------------------------------------------------
+
+
+def test_cli_chaos_preempt_resume_and_session_dir(tmp_path):
+    from repro.pipeline.cli import main
+    ck = str(tmp_path / "ck")
+    sd = str(tmp_path / "sess")
+    args = ["--steps", "3", "--tokens", "0",
+            "--ckpt-dir", ck, "--session-dir", sd]
+    sink = io.StringIO()
+    with redirect_stdout(sink), redirect_stderr(sink):
+        assert main(args + ["--chaos", "preempt-finetune:1"]) == 3
+        assert not os.path.exists(os.path.join(sd, "session.json"))
+        assert main(args) == 0                  # resumes, then saves
+        assert os.path.exists(os.path.join(sd, "session.json"))
+        assert main(args) == 0                  # restores, skips finetune
+    assert "restored session" in sink.getvalue()
+
+
+def test_cli_chaos_crash_exit_code(tmp_path):
+    from repro.pipeline.cli import main
+    sink = io.StringIO()
+    with redirect_stdout(sink), redirect_stderr(sink):
+        rc = main(["--steps", "2", "--tokens", "0",
+                   "--ckpt-dir", str(tmp_path / "ck"),
+                   "--chaos", "crash-ckpt:pre_latest"])
+    assert rc == 4
