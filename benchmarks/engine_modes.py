@@ -64,7 +64,7 @@ def run() -> list[str]:
     rows, result = [], {"arch": ARCH, "batch": BATCH, "prompt": PROMPT,
                         "decode_tokens": DECODE_TOKENS}
     for label, use_cache in (("cached", True), ("uncached", False)):
-        prefill_step, decode_step, init_serve = make_serve_steps(
+        prefill_step, decode_step, init_serve, _ = make_serve_steps(
             model, weight_cache=use_cache)
         prefill_step = jax.jit(prefill_step)
         decode_step = jax.jit(decode_step)

@@ -84,7 +84,7 @@ def _bench_decode_handwired(cfg) -> float:
 
     model = M.build(cfg)
     params, _ = model.init_params(jax.random.PRNGKey(0))
-    prefill_step, decode_step, init_serve = make_serve_steps(model)
+    prefill_step, decode_step, init_serve, _ = make_serve_steps(model)
     prefill_step, decode_step = jax.jit(prefill_step), jax.jit(decode_step)
     sparams, cache = init_serve(params, BATCH, SEQ + DECODE_TOKENS + 1)
     batch = {k: jnp.asarray(v) for k, v in M.make_batch(

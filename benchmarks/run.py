@@ -15,7 +15,7 @@ def main() -> None:
                             kernel_vjp, roofline, serve_pool,
                             table1_variation, table2_complexity,
                             table3_glue_analog, table4_variants,
-                            table5_last_layers)
+                            table5_last_layers, traffic_replay)
     suites = {
         "table1": table1_variation.run,
         "table2": table2_complexity.run,
@@ -28,6 +28,7 @@ def main() -> None:
         "kernel": kernel_vjp.run,
         "serve_pool": serve_pool.run,
         "decode_attn": decode_attention.run,
+        "traffic": traffic_replay.run,
     }
     want = sys.argv[1:] or list(suites)
     for name in want:

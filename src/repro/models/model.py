@@ -28,6 +28,10 @@ class Model:
     init_cache: Callable     # (batch, max_len) -> cache pytree
     prefill: Callable        # (params, batch, cache[, phase]) -> (logits, cache)
     decode_step: Callable    # (params, tokens, cache[, phase]) -> (logits, cache)
+    # incremental prefill: one chunk at the cache's current offset ->
+    # (all-position logits, cache); None for families without a KV-sequence
+    # cache to continue (ssm/hybrid/encdec)
+    prefill_chunk: Callable | None = None
 
     def init_params(self, key):
         """(params, axes) — values split from logical-axis annotations."""
@@ -77,6 +81,10 @@ def build(cfg: ModelConfig) -> Model:
             p, b, c, cfg, phase=phase),
         decode_step=lambda p, t, c, phase="decode": mod.decode_step(
             p, t, c, cfg, phase=phase),
+        prefill_chunk=(
+            (lambda p, b, c, phase="prefill": mod.prefill_chunk(
+                p, b, c, cfg, phase=phase))
+            if fam in ("dense", "moe", "vlm") else None),
     )
 
 

@@ -173,6 +173,47 @@ def _paged_prefill_append(cache, k, v):
                 free_count=fc - b * npg, pos=cache["pos"] + s)
 
 
+def _paged_chunk_append(cache, k, v):
+    """Append an ``s``-token prefill CHUNK at each slot's current position,
+    allocating pages lazily for every page boundary the chunk crosses.
+
+    The general form of ``_paged_prefill_append`` (start 0, whole prompt)
+    and ``_paged_decode_append`` (one token): chunked prefill interleaves a
+    long prompt's admission with live decode steps, so chunk ``c`` starts
+    at ``pos = c * chunk_len`` with the first touched page possibly half
+    filled by the previous chunk.  Positions past capacity are redirected
+    out of bounds (dropped), mirroring the decode append."""
+    b, s = k.shape[0], k.shape[1]
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    table, fl, fc = cache["page_table"], cache["free_list"], cache["free_count"]
+    pos = cache["pos"]                             # (B,)
+    p_total, ps = kp.shape[0], kp.shape[1]
+    mp = table.shape[1]
+    # map every logical page the chunk touches that has no physical page yet
+    pages = jnp.arange(mp)[None, :]                # (1, MP)
+    lo = pos[:, None] // ps
+    hi = jnp.minimum((pos[:, None] + s - 1) // ps, mp - 1)
+    need = (pages >= lo) & (pages <= hi) & (table < 0)   # (B, MP)
+    flat = need.reshape(-1)
+    rank = jnp.cumsum(flat.astype(jnp.int32)) - 1
+    fresh = fl[fc - 1 - rank].reshape(b, mp)
+    table = jnp.where(need, fresh, table)
+    # scatter the chunk's rows at their global positions
+    g = pos[:, None] + jnp.arange(s)[None, :]      # (B, s) global positions
+    oob = g >= mp * ps
+    lp = jnp.minimum(g // ps, mp - 1)
+    phys = jnp.take_along_axis(table, lp, axis=1)  # (B, s)
+    phys_w = jnp.where(oob, p_total, phys).reshape(-1)
+    off_w = jnp.where(oob, ps, g % ps).reshape(-1)
+    kp = kp.at[phys_w, off_w].set(
+        k.reshape(b * s, *k.shape[2:]).astype(kp.dtype))
+    vp = vp.at[phys_w, off_w].set(
+        v.reshape(b * s, *v.shape[2:]).astype(vp.dtype))
+    return dict(cache, k_pages=kp, v_pages=vp, page_table=table,
+                free_count=fc - jnp.sum(flat.astype(jnp.int32)),
+                pos=pos + s)
+
+
 def _paged_decode_append(cache, k, v):
     """Append one (KV, Dh) row per slot at its own position, allocating a
     fresh page lazily when a slot crosses a page boundary.
@@ -208,18 +249,30 @@ def _paged_decode_append(cache, k, v):
 
 
 def _paged_attention(params, q, k, v, cache, cfg: AttnCfg, mpo: MPOConfig,
-                     mask, phase: str):
+                     mask, phase: str, chunk: bool = False):
     """Self-attention over a paged KV cache (see ``transformer.init_cache``
     ``paged=True``).  Prefill attends over the in-hand prompt K/V; decode
     appends one row per slot and dispatches to the flash kernel or the
-    XLA gather fallback (``kernels.decode_attention.choose_impl``)."""
+    XLA gather fallback (``kernels.decode_attention.choose_impl``).
+
+    ``chunk=True`` marks a prefill CHUNK starting at the slot's current
+    (nonzero) position: the chunk is appended via ``_paged_chunk_append``
+    and its queries attend the whole mapped span (earlier chunks included)
+    through the ``gather_pages`` contiguous view, masked by the caller's
+    offset-aware mask — token-identical to an unchunked prefill."""
     from repro.kernels import decode_attention as DA
     from repro.kernels import ops
     from repro.parallel.ctx import shard_dims
     b, s = q.shape[0], q.shape[1]
     h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // kvh
-    if s > 1:                                      # prefill (start == 0)
+    if s > 1 and chunk:                            # prefill chunk (start >= 0)
+        new_cache = _paged_chunk_append(cache, k, v)
+        kc = DA.gather_pages(new_cache["k_pages"], new_cache["page_table"])
+        vc = DA.gather_pages(new_cache["v_pages"], new_cache["page_table"])
+        w = attention_scores(q, kc, cfg, mask)
+        y = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(vc.dtype), vc)
+    elif s > 1:                                    # prefill (start == 0)
         new_cache = _paged_prefill_append(cache, k, v)
         w = attention_scores(q, k, cfg, mask[..., :s])
         y = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
@@ -263,7 +316,7 @@ def _paged_attention(params, q, k, v, cache, cfg: AttnCfg, mpo: MPOConfig,
 
 def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
                     positions, mask, kv_x=None, cache=None,
-                    phase: str = "train"):
+                    phase: str = "train", chunk: bool = False):
     """Returns (y, new_cache).
 
     ``cache``: dict(k, v, pos) for incremental decode — or the paged form
@@ -272,7 +325,11 @@ def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
     pages and dispatches decode to ``kernels.decode_attention``.  ``kv_x``
     for cross-attention (ignores cache k/v writes when provided with
     cache — cross k/v are precomputed in the cache by prefill).  ``phase``
-    feeds the execution engine's per-matrix planning."""
+    feeds the execution engine's per-matrix planning.  ``chunk=True`` marks
+    a multi-token prefill CHUNK continuing at the cache's current position
+    (``transformer.prefill_chunk``): the caller supplies offset-aware
+    positions/mask; the dense cache path already appends at ``pos`` for
+    multi-token writes, the paged path switches to the chunked append."""
     b = x.shape[0]
     h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = _split_heads(L.apply_linear(params["wq"], x, cfg=mpo, phase=phase),
@@ -297,7 +354,7 @@ def apply_attention(params, x, cfg: AttnCfg, mpo: MPOConfig, *,
         v = gather_seq(v)
     if cache is not None and kv_x is None and "k_pages" in cache:
         return _paged_attention(params, q, k, v, cache, cfg, mpo, mask,
-                                phase)
+                                phase, chunk=chunk)
     new_cache = None
     if cache is not None:
         if kv_x is None:  # self-attention decode: append to ring buffer

@@ -83,7 +83,7 @@ def _is_local_flags(cfg: ModelConfig) -> jax.Array:
 
 
 def _layer_fwd(cfg: ModelConfig, x, layer, *, positions, mask, mask_local,
-               cache=None, phase="train"):
+               cache=None, phase="train", chunk=False):
     acfg = attn_cfg(cfg)
     is_local = layer.pop("_is_local") if "_is_local" in layer else None
     m = mask if is_local is None else jnp.where(is_local, mask_local, mask)
@@ -91,7 +91,7 @@ def _layer_fwd(cfg: ModelConfig, x, layer, *, positions, mask, mask_local,
     h = nn.apply_rmsnorm(layer["ln1"], x)
     a, new_cache = nn.apply_attention(layer["attn"], h, acfg, cfg.mpo,
                                       positions=positions, mask=m, cache=cache,
-                                      phase=phase)
+                                      phase=phase, chunk=chunk)
     x = ctx.shard_activation(x + a)
     h = nn.apply_rmsnorm(layer["ln2"], x)
     if cfg.num_experts:
@@ -105,7 +105,7 @@ def _layer_fwd(cfg: ModelConfig, x, layer, *, positions, mask, mask_local,
 
 
 def _run_stack(cfg: ModelConfig, params, x, *, positions, mask, mask_local,
-               caches=None, phase="train"):
+               caches=None, phase="train", chunk=False):
     """Scan the layer stack; returns (x, new_caches, aux_loss_sum)."""
     flags = _is_local_flags(cfg)
 
@@ -117,7 +117,7 @@ def _run_stack(cfg: ModelConfig, params, x, *, positions, mask, mask_local,
             layer["_is_local"] = flag
         y, new_cache, aux = _layer_fwd(cfg, x, layer, positions=positions,
                                        mask=mask, mask_local=mask_local,
-                                       cache=cache, phase=phase)
+                                       cache=cache, phase=phase, chunk=chunk)
         return (y, aux_sum + aux), new_cache
 
     if cfg.remat:
@@ -281,6 +281,42 @@ def prefill(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
                                   caches=cache, phase=phase)
     x = nn.apply_rmsnorm(params["final_norm"], x)
     return _logits(cfg, params, x[:, -1:], phase), new_caches
+
+
+def prefill_chunk(params, batch, cache, cfg: ModelConfig, *, phase="prefill"):
+    """One CHUNK of an incremental prefill: run ``s`` prompt tokens at each
+    slot's CURRENT cache offset (``cache["pos"]``), appending their K/V.
+
+    The substrate for chunked prefill (``pipeline.scheduler.ServePool``
+    ``prefill_chunk=``): a long prompt is split into fixed-size chunks and
+    fed through this step between live decode steps, so admission never
+    stalls live tenants for the whole prompt's forward.  Chunk ``c``'s
+    queries apply RoPE at their global offsets and attend every key at or
+    before them (earlier chunks included), which makes the concatenation of
+    chunks token-identical to one unchunked ``prefill``.
+
+    Returns ``(logits, cache)`` with logits for ALL ``s`` chunk positions —
+    the caller picks the row of the real last prompt token (under padded /
+    length-bucketed admission that is generally not the last chunk row).
+    Multi-row batches must sit at one shared offset (admission is batch-1;
+    the dense cache write uses row 0's position for the slice start)."""
+    x = _embed_inputs(cfg, params, batch, phase)
+    s = x.shape[1]
+    max_len = cache_kv_len(cache)
+    start = cache["pos"][0]                        # (B,) per-slot offsets
+    positions = start[:, None] + jnp.arange(s)[None, :]      # (B, s)
+    kj = jnp.arange(max_len)[None, None, :]
+    qi = positions[:, :, None]                     # (B, s, 1)
+    mask = (kj <= qi)[:, None]                     # (B, 1, s, max_len)
+    if cfg.local_window is not None:
+        mask_local = mask & (kj > qi - cfg.local_window)[:, None]
+    else:
+        mask_local = mask
+    x, new_caches, _ = _run_stack(cfg, params, x, positions=positions,
+                                  mask=mask, mask_local=mask_local,
+                                  caches=cache, phase=phase, chunk=True)
+    x = nn.apply_rmsnorm(params["final_norm"], x)
+    return _logits(cfg, params, x, phase), new_caches
 
 
 def decode_step(params, tokens, cache, cfg: ModelConfig, *, phase="decode"):

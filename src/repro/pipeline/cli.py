@@ -25,6 +25,13 @@ Fleet warm-start subcommands (autotune verdicts as a shippable artifact):
 
     repro-pipeline tune-export PATH      pack this host's autotune cache
     repro-pipeline tune-import PATH      merge an artifact into the cache
+
+Serving-frontend subcommand (docs/serving.md "Continuous batching"):
+
+    repro-pipeline serve-replay --requests 100 --rate 20 --chunk 8 --bucket
+
+replays a seeded open-loop Poisson trace against a ``ServePool`` and
+prints the latency/throughput summary as JSON.
 """
 
 from __future__ import annotations
@@ -60,6 +67,65 @@ def _tune_main(argv) -> int:
         print(f"[tune-import] {res['imported']} imported, "
               f"{res['skipped']} skipped (local wins) -> {res['path']} "
               f"({res['total']} total)")
+    return 0
+
+
+def _replay_main(argv) -> int:
+    """serve-replay: open-loop Poisson traffic against a ServePool."""
+    ap = argparse.ArgumentParser(
+        prog="repro-pipeline serve-replay",
+        description="Replay a seeded open-loop (Poisson-arrival) request "
+                    "trace against a multi-tenant ServePool and print the "
+                    "latency/throughput summary as JSON.  The trace is "
+                    "deterministic in --seed; --virtual-clock makes the "
+                    "whole replay deterministic (tests/CI).")
+    from repro import configs
+    ap.add_argument("--arch", default="qwen3-14b",
+                    choices=list(configs.ARCHS))
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="offered load, requests/second (Poisson)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, nargs=2, default=(4, 24),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--max-new", type=int, nargs=2, default=(1, 16),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="chunked admission prefill size (tokens); omit "
+                         "for whole-prompt admission")
+    ap.add_argument("--bucket", action="store_true",
+                    help="pad prompts to power-of-two length buckets "
+                         "(bounds admission jit retraces)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged pool KV cache")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="deterministic virtual time (fixed cost per pool "
+                         "step) instead of wall clock")
+    args = ap.parse_args(argv[1:])
+
+    from repro.pipeline import traffic
+    from repro.pipeline.session import Session
+    session = Session.init(args.arch)
+    pool = session.serve_pool(
+        args.slots, args.max_len, paged=args.paged,
+        page_size=args.page_size, prefill_chunk=args.chunk,
+        bucket_prompts=args.bucket)
+    trace = traffic.make_trace(
+        args.requests, args.rate, seed=args.seed,
+        prompt_len=tuple(args.prompt_len), max_new=tuple(args.max_new),
+        vocab_size=min(session.cfg.vocab_size, 1000))
+    clock = traffic.VirtualClock() if args.virtual_clock else None
+    report = traffic.replay(pool, trace, clock=clock)
+    stats = pool.stats()
+    print(json.dumps({"summary": report.summary,
+                      "prefill_traces": stats["prefill_traces"],
+                      "prefill_toks_s": stats["prefill_toks_s"],
+                      "decode_toks_s": stats["decode_toks_s"],
+                      "occupancy": round(stats["occupancy"], 4)},
+                     indent=2))
     return 0
 
 
@@ -106,6 +172,8 @@ def main(argv=None):
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] in ("tune-export", "tune-import"):
         return _tune_main(argv)
+    if argv and argv[0] == "serve-replay":
+        return _replay_main(argv)
 
     from repro import configs
 
@@ -140,7 +208,8 @@ def main(argv=None):
                          "grammar: preempt-finetune:K, preempt-squeeze:K, "
                          "crash-ckpt:mid_write[:STEP], "
                          "crash-ckpt:pre_latest[:STEP], io:SITE:N, "
-                         "nan-decode:STEP[:SLOT], deny-pages:N, flash-raise")
+                         "nan-decode:STEP[:SLOT], deny-pages:N, "
+                         "flash-raise, expire-admit:K")
     ap.add_argument("--strict-analysis", action="store_true",
                     help="exit nonzero if the report's static-analysis "
                          "summary contains errors (repro-lint runs the full "

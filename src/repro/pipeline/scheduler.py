@@ -21,6 +21,26 @@ The aggregate win is the usual continuous-batching one: a decode step over
 ``k`` tenants concurrently multiplies tokens/s until the step becomes
 compute-bound (``benchmarks/serve_pool.py`` tracks the curve).
 
+Continuous admission (``prefill_chunk=`` / ``bucket_prompts=``) streams the
+admission prefill instead of running it whole:
+
+* ``bucket_prompts=True`` right-pads each prompt to a power-of-two length
+  bucket before prefill (causal masking makes real positions independent of
+  the padding), collapsing the per-prompt-length jit retraces of the legacy
+  path to at most ~``log2(max_len)`` distinct prefill shapes;
+* ``prefill_chunk=N`` feeds the (padded) prompt through the incremental
+  chunk prefill N tokens at a time, ONE chunk per ``step()`` while tenants
+  are live — a long prompt's admission interleaves with decode instead of
+  stalling every live tenant for its full prefill.
+
+Both are token-identical to the legacy whole-prompt path (asserted in
+tests/test_traffic.py) and compose with paged KV: bucket-padding pages
+never reach the pool (adoption copies only the real context), and an
+admission abandoned mid-stream (deadline, chaos) drops its private batch-1
+cache without touching the pool page table.  ``pipeline/traffic.py`` +
+``benchmarks/traffic_replay.py`` measure the latency win under open-loop
+Poisson load.
+
 Works transparently over a mesh-sharded serving state (``mesh=`` — see
 ``docs/serving.md``): the pool cache lives in the flash-decoding layout and
 admission scatters into the sharded rows.
@@ -120,7 +140,9 @@ class ServePool:
                  axes=None, version: int = 0, paged: bool = False,
                  page_size: int = 16, pool_pages: int | None = None,
                  admission_retry_limit: int = 1000,
-                 guard_logits: bool = True):
+                 guard_logits: bool = True,
+                 prefill_chunk: int | None = None,
+                 bucket_prompts: bool = False, bucket_min: int = 8):
         if model.cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"ServePool supports families {SUPPORTED_FAMILIES}; "
@@ -134,15 +156,32 @@ class ServePool:
             raise ValueError(f"slots={slots} must be >= 1")
         if pool_pages is not None and not paged:
             raise ValueError("pool_pages= requires paged=True")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} must be >= 1 (or None to "
+                "disable chunked admission)")
+        if bucket_min < 1:
+            raise ValueError(f"bucket_min={bucket_min} must be >= 1")
+        if ((prefill_chunk is not None or bucket_prompts)
+                and model.prefill_chunk is None):
+            raise ValueError(
+                "chunked/bucketed admission needs an incremental KV prefill "
+                f"(model.prefill_chunk); family {model.cfg.family!r} has "
+                "none — use the default whole-prompt admission")
         self.slots, self.max_len = slots, max_len
         self.mesh = mesh
         self.version = version
         self.paged, self.page_size = paged, page_size
         self.admission_retry_limit = admission_retry_limit
         self.guard_logits = guard_logits
+        self.prefill_chunk = prefill_chunk
+        self.bucket_prompts, self.bucket_min = bucket_prompts, bucket_min
+        # continuous admission: prompts stream through the chunked-prefill
+        # step (one chunk per decode step while tenants are live)
+        self._continuous = prefill_chunk is not None or bucket_prompts
         t0 = time.perf_counter()
         # pool-batch steps: one jitted decode over all slots
-        prefill, self._decode, init_pool = make_serve_steps(
+        prefill, self._decode, init_pool, chunk_step = make_serve_steps(
             model, weight_cache=weight_cache, mesh=mesh, rules=rules,
             axes=axes, paged=paged, page_size=page_size,
             pool_pages=pool_pages)
@@ -163,6 +202,8 @@ class ServePool:
         if mesh is None:
             self._decode = jax.jit(self._decode)
             self._prefill1 = jax.jit(prefill)
+            self._chunk1 = (jax.jit(chunk_step)
+                            if chunk_step is not None else None)
             self._cache1_template = model.init_cache(1, max_len, **cache_kw)
         else:
             from repro.parallel import sharding as S
@@ -181,6 +222,12 @@ class ServePool:
                     return jit1(p, b, c)
 
             self._prefill1 = prefill1
+            self._chunk1 = chunk_step  # already jit-backed + mesh-wrapped
+        # after a bucketed prefill the batch-1 cache position sits at the
+        # PADDED length; pin it back to the real prompt length so adoption
+        # copies (and decode continues from) exactly the real context
+        self._fix_len = jax.jit(
+            lambda c, n: dict(c, pos=jnp.full_like(c["pos"], n)))
         self.init_seconds = time.perf_counter() - t0
 
         self._adopt = jax.jit(self._adopt_paged_fn if paged
@@ -195,6 +242,11 @@ class ServePool:
         self._slot_rid: list[int | None] = [None] * slots
         self._last_tok = np.zeros((slots, 1), np.int32)
         self._next_rid = 0
+        # in-flight chunked admission (continuous mode): at most one prompt
+        # streams through the batch-1 chunk prefill at a time, one chunk per
+        # step while tenants are live.  The target slot is NOT in
+        # ``_slot_rid`` until the last chunk lands (decode skips it).
+        self._admit_state: dict | None = None
         # page-reservation admission state (paged pools only)
         self._total_pages = (int(self._cache["k_pages"].shape[1])
                              if paged else 0)
@@ -203,6 +255,9 @@ class ServePool:
         self._decode_steps = 0
         self._live_slot_steps = 0       # sum of live slots over decode steps
         self._tokens_generated = 0
+        self._prefill_tokens = 0        # prompt tokens prefilled (real, unpadded)
+        self._decode_tokens = 0         # tokens produced by batched decode
+        self._prefill_shapes: set[int] = set()  # distinct prefill seq lengths
         self._completed = 0
         self._failed = 0
         self._failures: list[dict] = []
@@ -398,6 +453,14 @@ class ServePool:
                     self._fail(req, f"deadline ({req.deadline_s}s) expired "
                                f"after {len(req.tokens)} tokens")
                     self._release_slot(slot)
+        st = self._admit_state
+        if st is not None and self._expired(st["req"]):
+            # in-flight chunked admission: drop the half-built batch-1
+            # cache; nothing was adopted, so the pool is untouched
+            self._admit_state = None
+            self._fail(st["req"], f"deadline ({st['req'].deadline_s}s) "
+                       "expired between prefill chunks "
+                       f"({st['next']}/{len(st['pieces'])})")
 
     def _admit_one(self, slot: int, req: Request):
         """Prefill the prompt at batch 1 and scatter its cache rows into
@@ -406,11 +469,13 @@ class ServePool:
         t0 = time.perf_counter()
         req.slot = slot
         batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+        self._prefill_shapes.add(int(req.prompt.size))
         logits, cache1 = self._prefill1(self._sparams, batch,
                                         self._cache1_template)
         first = int(np.asarray(jnp.argmax(logits[:, -1], -1))[0])
         req.tokens.append(first)
         self._tokens_generated += 1
+        self._prefill_tokens += int(req.prompt.size)
         if req.max_new_tokens == 1 or first == req.eos_id:
             self._finish(req)       # never occupies the slot
         else:
@@ -419,6 +484,107 @@ class ServePool:
             self._last_tok[slot, 0] = first
             self._cache = self._adopt(self._cache, cache1,
                                       jnp.int32(slot))
+        self._admit_seconds += time.perf_counter() - t0
+
+    # ---- continuous admission (chunked / length-bucketed prefill) ----
+    #
+    # The legacy path above prefills the WHOLE prompt in one jitted call:
+    # every distinct prompt length is a fresh trace, and a long prompt
+    # stalls all live tenants for its full prefill.  Continuous mode fixes
+    # both: prompts are right-padded to a power-of-two length bucket (the
+    # causal mask makes real positions independent of the padding, so
+    # distinct traces collapse to ~log2(max_len)) and fed through the
+    # incremental chunk prefill ONE chunk per step while tenants are live —
+    # decode interleaves between chunks, so a long admission never stalls
+    # the pool.  Token-identical to the legacy path (asserted in
+    # tests/test_traffic.py).
+
+    def _bucket_len(self, n: int) -> int:
+        """Padded prefill length for an ``n``-token prompt: next power of
+        two, floored at ``bucket_min``, capped at ``max_len``."""
+        if not self.bucket_prompts:
+            return n
+        return min(max(self.bucket_min, 1 << (n - 1).bit_length()),
+                   self.max_len)
+
+    def _pieces(self, prompt: np.ndarray) -> list[np.ndarray]:
+        """Split the (bucket-padded) prompt into prefill chunks.  Padding
+        token ids are irrelevant (never attended by real positions, and
+        their KV is overwritten before decode attends it): zeros."""
+        padded_len = self._bucket_len(prompt.size)
+        if padded_len != prompt.size:
+            prompt = np.concatenate(
+                [prompt, np.zeros(padded_len - prompt.size, np.int32)])
+        c = self.prefill_chunk
+        if c is None or c >= padded_len:
+            return [prompt]
+        return [prompt[i:i + c] for i in range(0, padded_len, c)]
+
+    def _admit_start(self, slot: int, req: Request):
+        """Begin a (possibly multi-step) chunked admission into ``slot``."""
+        req.slot = slot
+        req.status = "admitting"
+        self._admit_state = {"req": req, "slot": slot,
+                             "cache": self._cache1_template,
+                             "pieces": self._pieces(req.prompt),
+                             "next": 0, "off": 0, "first": None}
+
+    def _admit_piece(self):
+        """Run ONE prefill chunk of the in-flight admission; complete the
+        admission (first token + pool adoption) after the last chunk."""
+        st = self._admit_state
+        req = st["req"]
+        if st["next"] > 0 and (faults.admit_chunk_expired(st["next"])
+                               or self._expired(req)):
+            # deadline blew between chunks: the half-built batch-1 cache is
+            # simply dropped — nothing was adopted, the pool page table and
+            # the slot are untouched
+            self._admit_state = None
+            self._fail(req, f"deadline ({req.deadline_s}s) expired between "
+                       f"prefill chunks ({st['next']}/{len(st['pieces'])})")
+            return
+        t0 = time.perf_counter()
+        piece = st["pieces"][st["next"]]
+        self._prefill_shapes.add(int(piece.size))
+        logits, st["cache"] = self._chunk1(
+            self._sparams, {"tokens": jnp.asarray(piece)[None, :]},
+            st["cache"])
+        # the REAL last prompt token's logits row picks the first generated
+        # token — under bucket padding that row is inside some chunk, not
+        # necessarily the last position of the last chunk
+        last = int(req.prompt.size) - 1
+        if st["off"] <= last < st["off"] + piece.size:
+            st["first"] = int(np.asarray(
+                jnp.argmax(logits[0, last - st["off"]], -1)))
+        st["off"] += int(piece.size)
+        st["next"] += 1
+        self._admit_seconds += time.perf_counter() - t0
+        if st["next"] >= len(st["pieces"]):
+            self._admit_state = None
+            self._admit_complete(req, st)
+
+    def _admit_complete(self, req: Request, st: dict):
+        """All chunks prefilled: emit the first token; adopt into the pool
+        slot unless the request finished instantly (mirrors _admit_one)."""
+        t0 = time.perf_counter()
+        first = st["first"]
+        req.tokens.append(first)
+        self._tokens_generated += 1
+        self._prefill_tokens += int(req.prompt.size)
+        if req.max_new_tokens == 1 or first == req.eos_id:
+            self._finish(req)       # never occupies the slot
+        else:
+            # pin the batch-1 position from the padded length back to the
+            # real prompt length: adoption then copies only the real
+            # context (paged: only ceil(real/ps) pages — padding pages
+            # never reach the pool), and decode overwrites the padded KV
+            # at position ``real_len`` before anything attends it
+            cache1 = self._fix_len(st["cache"], jnp.int32(req.prompt.size))
+            slot = st["slot"]
+            req.status = "live"
+            self._slot_rid[slot] = req.rid
+            self._last_tok[slot, 0] = first
+            self._cache = self._adopt(self._cache, cache1, jnp.int32(slot))
         self._admit_seconds += time.perf_counter() - t0
 
     def _admission_blocked(self, req: Request) -> bool:
@@ -439,7 +605,19 @@ class ServePool:
             self._reserved_pages += need
         return denied
 
+    def _free_slot_for_admission(self) -> int | None:
+        """A slot no live tenant (and no in-flight admission) holds."""
+        held = (self._admit_state["slot"]
+                if self._admit_state is not None else None)
+        for slot in range(self.slots):
+            if self._slot_rid[slot] is None and slot != held:
+                return slot
+        return None
+
     def _admit(self):
+        if self._continuous:
+            self._admit_continuous()
+            return
         # keep scanning: an admission that finishes instantly (one-token
         # budget / first-token EOS) leaves its slot free for the next
         # pending request in the SAME pass
@@ -466,6 +644,36 @@ class ServePool:
                 self._admit_one(slot, req)
                 progressed = True
 
+    def _admit_continuous(self):
+        """Continuous-mode admission: while tenants are live, run at most
+        ONE prefill chunk per step (decode interleaves between chunks, so a
+        long prompt never stalls the pool); with nobody live there is
+        nothing to stall, so drain chunks back-to-back."""
+        while True:
+            if self._admit_state is not None:
+                self._admit_piece()
+            elif self._queue:
+                slot = self._free_slot_for_admission()
+                if slot is None:
+                    return
+                req = self._requests[self._queue[0]]
+                if self._admission_blocked(req):
+                    if req.admit_denials > self.admission_retry_limit:
+                        self._queue.popleft()
+                        self._fail(req, "page-pool admission denied "
+                                   f"{req.admit_denials} times "
+                                   "(admission_retry_limit="
+                                   f"{self.admission_retry_limit})")
+                        continue    # head failed: try the next request
+                    return          # head stays queued; a later step retries
+                self._queue.popleft()
+                self._admit_start(slot, req)
+                self._admit_piece()
+            else:
+                return
+            if self.live > 0:
+                return              # decode is waiting: one chunk per step
+
     # ---- decode ----
 
     @property
@@ -477,6 +685,11 @@ class ServePool:
     def pending(self) -> int:
         """Submitted but not yet admitted requests."""
         return len(self._queue)
+
+    @property
+    def admitting(self) -> bool:
+        """A chunked admission is in flight (continuous mode only)."""
+        return self._admit_state is not None
 
     def step(self) -> int:
         """Expire deadline-blown requests, admit whatever fits, then run ONE
@@ -525,6 +738,7 @@ class ServePool:
             t = int(tok_host[slot, 0])
             req.tokens.append(t)
             self._tokens_generated += 1
+            self._decode_tokens += 1
             self._last_tok[slot, 0] = t
             if len(req.tokens) >= req.max_new_tokens or t == req.eos_id:
                 self._finish(req)
@@ -541,13 +755,19 @@ class ServePool:
         still-queued/live request fails with its partial output and the
         call returns what completed in time."""
         t0 = time.monotonic()
-        while self._queue or self.live > 0:
+        while (self._queue or self.live > 0
+               or self._admit_state is not None):
             if budget_s is not None and time.monotonic() - t0 > budget_s:
                 for rid in list(self._queue):
                     self._fail(self._requests[rid],
                                f"pool wall-clock budget ({budget_s}s) "
                                "exhausted before admission")
                 self._queue.clear()
+                if self._admit_state is not None:
+                    st, self._admit_state = self._admit_state, None
+                    self._fail(st["req"], "pool wall-clock budget "
+                               f"({budget_s}s) exhausted between prefill "
+                               f"chunks ({st['next']}/{len(st['pieces'])})")
                 for slot, rid in enumerate(self._slot_rid):
                     if rid is not None:
                         req = self._requests[rid]
@@ -556,7 +776,8 @@ class ServePool:
                                    f"{len(req.tokens)} tokens")
                         self._release_slot(slot)
                 break
-            if self.step() == 0 and not self._queue:
+            if (self.step() == 0 and not self._queue
+                    and self._admit_state is None):
                 break
         return {rid: r.output for rid, r in self._requests.items()
                 if r.done}
@@ -599,5 +820,22 @@ class ServePool:
             "init_seconds": round(self.init_seconds, 4),
             "tok_per_s": round(self._tokens_generated / busy, 1)
             if busy > 0 else 0.0,
+            # phase-split throughput: prefill counts REAL prompt tokens
+            # (bucket padding excluded) over admission wall time; decode
+            # counts batched-decode tokens over decode wall time
+            "prefill_tokens": self._prefill_tokens,
+            "decode_tokens": self._decode_tokens,
+            "prefill_toks_s": round(
+                self._prefill_tokens / self._admit_seconds, 1)
+            if self._admit_seconds > 0 else 0.0,
+            "decode_toks_s": round(
+                self._decode_tokens / self._decode_seconds, 1)
+            if self._decode_seconds > 0 else 0.0,
+            # admission retrace accounting: distinct prefill/chunk sequence
+            # lengths fed to the batch-1 jit (each is one trace); bucketing
+            # bounds this at ~log2(max_len)
+            "prefill_traces": len(self._prefill_shapes),
+            "prefill_chunk": self.prefill_chunk,
+            "bucket_prompts": self.bucket_prompts,
             "weights_version": self.version,
         }

@@ -95,7 +95,7 @@ class ServeHandle:
         self.version = version
         self.mesh = mesh
         self.paged = paged
-        prefill_step, decode_step, init_serve = make_serve_steps(
+        prefill_step, decode_step, init_serve, _ = make_serve_steps(
             model, weight_cache=weight_cache, mesh=mesh, rules=rules,
             axes=axes, paged=paged, page_size=page_size)
         t0 = time.perf_counter()
@@ -516,7 +516,9 @@ class Session:
                    rules: dict | None = None, paged: bool = False,
                    page_size: int = 16, pool_pages: int | None = None,
                    admission_retry_limit: int = 1000,
-                   guard_logits: bool = True):
+                   guard_logits: bool = True,
+                   prefill_chunk: int | None = None,
+                   bucket_prompts: bool = False, bucket_min: int = 8):
         """Multi-tenant batched decode over the CURRENT weights: a
         ``pipeline.scheduler.ServePool`` with ``slots`` decode rows.
         Independent requests are admitted into free slots (batch-1 prefill
@@ -532,7 +534,15 @@ class Session:
         oversubscribes the paged KV pool (admission then backpressures on
         page reservations instead of crashing), ``guard_logits`` quarantines
         a slot whose logits go NaN/inf, ``admission_retry_limit`` bounds the
-        backpressure retries before a request fails.  Example::
+        backpressure retries before a request fails.
+
+        Continuous-admission knobs (docs/serving.md "Continuous batching"):
+        ``bucket_prompts=True`` pads prompts to power-of-two length buckets
+        (bounds admission jit retraces at ~log2(max_len));
+        ``prefill_chunk=N`` streams the admission prefill N tokens at a
+        time, interleaved with decode, so a long prompt never stalls live
+        tenants.  Both are token-identical to the default whole-prompt
+        admission.  Example::
 
             pool = session.serve_pool(slots=4, max_len=64)
             rids = [pool.submit(p, max_new_tokens=16) for p in prompts]
@@ -551,7 +561,10 @@ class Session:
                          version=self._version, paged=paged,
                          page_size=page_size, pool_pages=pool_pages,
                          admission_retry_limit=admission_retry_limit,
-                         guard_logits=guard_logits)
+                         guard_logits=guard_logits,
+                         prefill_chunk=prefill_chunk,
+                         bucket_prompts=bucket_prompts,
+                         bucket_min=bucket_min)
         self._pools = [r for r in self._pools if r() is not None]
         self._pools.append(weakref.ref(pool))
         self._record("serve", t0, {"pool": True, "slots": slots,

@@ -24,6 +24,10 @@ decode logits        ``pipeline.scheduler.ServePool.step`` — the chosen
                      slot's logits row becomes NaN before the guard runs
 page admission       ``ServePool`` admission — reports the page pool as
                      exhausted for the first N attempts (backpressure)
+admission chunk      ``ServePool`` chunked admission — expires the
+                     in-flight request's deadline between prefill chunks
+                     (the half-built batch-1 cache must be dropped without
+                     touching the pool page table)
 flash kernel         ``kernels.decode_attention.flash_decode_attention``
                      — raises as a failed Pallas lowering would
 ===================  =====================================================
@@ -96,6 +100,9 @@ class FaultPlan:
     nan_decode_slot: int = 0
     # report the page pool exhausted for the first N admission attempts
     deny_page_admissions: int = 0
+    # expire the in-flight chunked admission's deadline after this many
+    # prefill chunks landed (1-based: K=1 fires between chunk 1 and 2)
+    expire_admit_chunk: int | None = None
     # flash decode-attention raises (as a failed lowering would)
     flash_raises: bool = False
     _crashed: bool = dataclasses.field(default=False, init=False, repr=False)
@@ -108,6 +115,7 @@ class FaultPlan:
             crash-ckpt:mid_write[:STEP]   crash-ckpt:pre_latest[:STEP]
             io:SITE:N                 nan-decode:STEP[:SLOT]
             deny-pages:N              flash-raise
+            expire-admit:K
         """
         plan = cls()
         for spec in specs:
@@ -132,6 +140,8 @@ class FaultPlan:
                         plan.nan_decode_slot = int(args[1])
                 elif name == "deny-pages":
                     plan.deny_page_admissions = int(args[0])
+                elif name == "expire-admit":
+                    plan.expire_admit_chunk = int(args[0])
                 elif name == "flash-raise":
                     plan.flash_raises = True
                 else:
@@ -209,6 +219,18 @@ def corrupt_decode_logits(logits, step: int) -> np.ndarray | None:
     out = np.array(logits, np.float32)
     out[p.nan_decode_slot] = np.nan
     return out
+
+
+def admit_chunk_expired(chunks_done: int) -> bool:
+    """True when the plan expires the in-flight chunked admission after
+    ``chunks_done`` prefill chunks (checked between chunks; one-shot)."""
+    p = _ACTIVE
+    if p is None or p.expire_admit_chunk is None:
+        return False
+    if chunks_done >= p.expire_admit_chunk:
+        p.expire_admit_chunk = None     # consumed
+        return True
+    return False
 
 
 def page_admission_denied() -> bool:

@@ -107,11 +107,32 @@ def make_eval_step(model: Model, loss_fn: Callable | None = None):
 # --------------------------------------------------------------------------
 
 
+class ServeSteps(NamedTuple):
+    """The jit-able serving step bundle ``make_serve_steps`` returns.
+
+    Unpacks like the historical 3-tuple (``prefill, decode, init_serve, _ =
+    make_serve_steps(...)`` — or index it); ``prefill_chunk`` is the
+    incremental-prefill step behind chunked admission
+    (``model.prefill_chunk``), ``None`` for families without one."""
+
+    prefill: Any
+    decode: Any
+    init_serve: Any
+    prefill_chunk: Any = None
+
+
 def make_serve_steps(model: Model, *, weight_cache: bool = True,
                      mesh=None, rules: dict | None = None, axes=None,
                      paged: bool = False, page_size: int = 16,
-                     pool_pages: int | None = None):
-    """(prefill_step, decode_step, init_serve) for batched serving.
+                     pool_pages: int | None = None) -> "ServeSteps":
+    """``ServeSteps(prefill, decode, init_serve, prefill_chunk)`` for
+    batched serving.
+
+    ``prefill_chunk(params, batch, cache)`` continues a prefill at the
+    cache's current per-slot offsets and returns logits for EVERY chunk
+    position (the caller slices the real last prompt token's row — under
+    length-bucketed padding that is not the last row).  It is ``None`` for
+    families without a KV-sequence cache (ssm/hybrid/encdec).
 
     ``paged=True`` allocates the PAGED KV cache
     (``transformer.init_cache(paged=True, page_size=...)``): decode
@@ -160,7 +181,7 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True,
 
         mesh = make_host_mesh(model=4)            # 8 devices -> (2, 4)
         params, axes = model.init_params(key)
-        prefill, decode, init_serve = make_serve_steps(
+        prefill, decode, init_serve, _ = make_serve_steps(
             model, mesh=mesh, axes=axes)
         sparams, cache = init_serve(params, batch=8, max_len=128)
         logits, cache = prefill(sparams, batch_inputs, cache)
@@ -184,8 +205,14 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True,
         next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         return next_tok, logits, cache
 
+    prefill_chunk_step = None
+    if model.prefill_chunk is not None:
+        def prefill_chunk_step(params, batch, cache):
+            return model.prefill_chunk(params, batch, cache, phase="prefill")
+
     if mesh is None:
-        return prefill_step, decode_step, init_serve
+        return ServeSteps(prefill_step, decode_step, init_serve,
+                          prefill_chunk_step)
 
     from jax.sharding import NamedSharding, PartitionSpec
     from repro.parallel import sharding as S
@@ -232,10 +259,24 @@ def make_serve_steps(model: Model, *, weight_cache: bool = True,
         with maybe_mesh(mesh):
             return jitted["decode"](params, tokens, cache)
 
+    chunk_sharded = None
+    if prefill_chunk_step is not None:
+        # admission-side step: inputs arrive committed (the batch-1 cache
+        # template is device_put by the caller), so no explicit shardings —
+        # only the mesh context for activation constraints at trace
+        jit_chunk = jax.jit(prefill_chunk_step)
+
+        def chunk_sharded(params, batch, cache):
+            with maybe_mesh(mesh):
+                return jit_chunk(params, batch, cache)
+
+        chunk_sharded.jitted = True
+
     # the returned steps are already jit-backed with explicit shardings:
     # callers (ServeHandle) must not wrap them in a second jax.jit
     prefill_sharded.jitted = decode_sharded.jitted = True
-    return prefill_sharded, decode_sharded, init_serve_mesh
+    return ServeSteps(prefill_sharded, decode_sharded, init_serve_mesh,
+                      chunk_sharded)
 
 
 # --------------------------------------------------------------------------

@@ -1,7 +1,59 @@
 import os
+import random
 import sys
 
 # tests must see exactly ONE device (the dry-run subprocess sets its own 512)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# --------------------------------------------------------------------------
+# hypothesis-or-fixed-seed shim, shared by every property-style test module
+# (test_mpo_core, test_traffic).  ``hypothesis`` is optional: when it is not
+# installed the property tests fall back to a minimal fixed-seed shim that
+# draws a handful of deterministic examples per strategy, so the suite still
+# collects and exercises every property (with less input diversity).
+# Import as ``from conftest import given, settings, st``.
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fixed-seed fallback: property tests -> example tests
+    class _IntStrategy:
+        def __init__(self, lo, hi, fn=None):
+            self.lo, self.hi = lo, hi
+            self.fn = fn or (lambda v: v)
+
+        def map(self, fn):
+            return _IntStrategy(self.lo, self.hi, lambda v: fn(self.fn(v)))
+
+        def draw(self, rng):
+            return self.fn(rng.randint(self.lo, self.hi))
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _IntStrategy(lo, hi)
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def deco(f):
+            def wrapper():
+                rng = random.Random(0)
+                examples = max(getattr(wrapper, "_max_examples", 8), 1)
+                for _ in range(examples):
+                    f(*(s.draw(rng) for s in strategies))
+            # plain attribute copy — functools.wraps would expose the wrapped
+            # signature and make pytest treat the drawn args as fixtures
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=8, **_ignored):
+        def deco(f):
+            f._max_examples = min(max_examples, 8)
+            return f
+        return deco

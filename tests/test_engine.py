@@ -253,7 +253,7 @@ def test_serve_decode_zero_per_step_contractions():
     cfg = configs.smoke_config("qwen3-14b")
     model = M.build(cfg)
     params, _ = model.init_params(jax.random.PRNGKey(0))
-    prefill_step, decode_step, init_serve = make_serve_steps(model)
+    prefill_step, decode_step, init_serve, _ = make_serve_steps(model)
     sparams, cache = init_serve(params, 2, 24)
 
     # every attention/mlp matrix in the serving tree is dense
@@ -271,7 +271,7 @@ def test_serve_decode_zero_per_step_contractions():
     tok = jnp.argmax(logits_c[:, -1], -1)[:, None].astype(jnp.int32)
 
     # reference: same weights, no weight cache
-    _, decode_raw, init_raw = make_serve_steps(model, weight_cache=False)
+    _, decode_raw, init_raw, _ = make_serve_steps(model, weight_cache=False)
     rparams, rcache = init_raw(params, 2, 24)
     logits_r, rcache = prefill_step(rparams, batch, rcache)
     np.testing.assert_allclose(np.asarray(logits_c, np.float32),

@@ -1,58 +1,15 @@
 """Unit + property tests for the MPO core (paper §3, Algorithm 1, Eq. 2-6).
 
-``hypothesis`` is optional: when it is not installed the property tests fall
-back to a minimal fixed-seed shim that draws a handful of deterministic
-examples per strategy, so the suite still collects and exercises every
-property (with less input diversity)."""
-
-import random
+``hypothesis`` is optional — the property tests run through the
+hypothesis-or-fixed-seed shim in ``tests/conftest.py`` (fixed-seed example
+tests when hypothesis is not installed)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # fixed-seed fallback: property tests -> example tests
-    class _IntStrategy:
-        def __init__(self, lo, hi, fn=None):
-            self.lo, self.hi = lo, hi
-            self.fn = fn or (lambda v: v)
-
-        def map(self, fn):
-            return _IntStrategy(self.lo, self.hi, lambda v: fn(self.fn(v)))
-
-        def draw(self, rng):
-            return self.fn(rng.randint(self.lo, self.hi))
-
-    class _Strategies:
-        @staticmethod
-        def integers(lo, hi):
-            return _IntStrategy(lo, hi)
-
-    st = _Strategies()
-
-    def given(*strategies):
-        def deco(f):
-            def wrapper():
-                rng = random.Random(0)
-                examples = max(getattr(wrapper, "_max_examples", 8), 1)
-                for _ in range(examples):
-                    f(*(s.draw(rng) for s in strategies))
-            # plain attribute copy — functools.wraps would expose the wrapped
-            # signature and make pytest treat the drawn args as fixtures
-            wrapper.__name__ = f.__name__
-            wrapper.__doc__ = f.__doc__
-            return wrapper
-        return deco
-
-    def settings(max_examples=8, **_ignored):
-        def deco(f):
-            f._max_examples = min(max_examples, 8)
-            return f
-        return deco
-
+from conftest import given, settings, st
 from repro.core import mpo
 
 jax.config.update("jax_enable_x64", False)

@@ -51,13 +51,15 @@ def _trees_equal(t1, t2) -> bool:
 def test_fault_plan_parse():
     plan = faults.FaultPlan.parse(
         ["preempt-squeeze:2", "io:ckpt:3", "nan-decode:1:0",
-         "deny-pages:2", "flash-raise", "crash-ckpt:pre_latest:5"])
+         "deny-pages:2", "flash-raise", "crash-ckpt:pre_latest:5",
+         "expire-admit:2"])
     assert plan.preempt_squeeze_iter == 2
     assert plan.io_errors == {"ckpt": 3}
     assert plan.nan_decode_step == 1 and plan.nan_decode_slot == 0
     assert plan.deny_page_admissions == 2
     assert plan.flash_raises
     assert plan.crash_ckpt == "pre_latest" and plan.crash_ckpt_step == 5
+    assert plan.expire_admit_chunk == 2
 
 
 @pytest.mark.parametrize("spec", ["bogus:1", "crash-ckpt:nowhere",
@@ -74,6 +76,7 @@ def test_checks_are_noops_without_plan():
     faults.check_flash()
     assert faults.corrupt_decode_logits(np.zeros((2, 1, 4)), 0) is None
     assert not faults.page_admission_denied()
+    assert not faults.admit_chunk_expired(3)
 
 
 # --------------------------------------------------------------------------
@@ -329,6 +332,57 @@ def test_wall_clock_budget_fails_leftovers(lm_session):
     assert out == {}
     assert pool.stats()["failed"] == len(rids)
     assert all("budget" in f["error"] for f in pool.stats()["failures"])
+
+
+def test_expire_admit_chunk_drops_admission_cleanly(lm_session, fault_free):
+    """Deadline expiry BETWEEN prefill chunks (FaultPlan expire-admit:K):
+    the half-built batch-1 cache is dropped before anything was adopted —
+    the pool page table is untouched, healthy tenants are bit-identical to
+    the fault-free run, and the pool keeps admitting afterwards."""
+    long_prompt = np.arange(1, 17, dtype=np.int32)      # 8 chunks of 2
+    with faults.fault_scope(faults.FaultPlan(expire_admit_chunk=2)):
+        pool = lm_session.serve_pool(prefill_chunk=2, **POOL_KW)
+        victim = pool.submit(long_prompt, 4, deadline_s=120.0)
+        rids = [pool.submit(p, 6) for p in PROMPTS]
+        out = pool.run()
+    req = pool.request(victim)
+    assert req.status == "failed" and "prefill chunks" in req.error
+    assert victim not in out and req.tokens == []
+    ff = [fault_free[r] for r in sorted(fault_free)]
+    for rid, want in zip(rids, ff):
+        assert pool.request(rid).status == "done"
+        assert (out[rid] == want).all()
+    st = pool.stats()
+    assert st["page_pool"]["used"] == 0, "dropped admission leaked pages"
+    assert st["page_pool"]["reserved"] == 0
+    # the frontend is still healthy: the next submit admits and completes
+    again = pool.submit(PROMPTS[0], 6)
+    assert (pool.run()[again] == ff[0]).all()
+
+
+def test_nan_quarantine_during_chunked_admission(lm_session, fault_free):
+    """NaN logits fire while a chunked admission is IN FLIGHT: the bad
+    decode slot quarantines alone; the mid-stream admission completes and
+    its tokens (plus every other tenant's) match the fault-free run."""
+    long_prompt = np.arange(1, 17, dtype=np.int32)
+    ff = [fault_free[r] for r in sorted(fault_free)]
+    # fault-free reference for the long prompt through the SAME chunked path
+    ref = lm_session.serve_pool(prefill_chunk=2, **POOL_KW)
+    long_rid = ref.submit(long_prompt, 4)
+    long_want = ref.run()[long_rid]
+    with faults.fault_scope(faults.FaultPlan(nan_decode_step=1,
+                                             nan_decode_slot=0)):
+        pool = lm_session.serve_pool(prefill_chunk=2, **POOL_KW)
+        bad = pool.submit(PROMPTS[0], 6)        # slot 0: NaN at decode 1
+        longr = pool.submit(long_prompt, 4)     # admits between decodes
+        other = pool.submit(PROMPTS[1], 6)
+        out = pool.run()
+    assert pool.request(bad).status == "failed"
+    assert "non-finite" in pool.request(bad).error
+    assert (out[longr] == long_want).all()
+    assert (out[other] == ff[1]).all()
+    st = pool.stats()
+    assert st["page_pool"]["used"] == 0 and st["page_pool"]["reserved"] == 0
 
 
 def test_flash_failure_degrades_to_xla(lm_session, fault_free, monkeypatch):
