@@ -1,0 +1,137 @@
+"""Replicated-fleet degradation benchmark: p99 under a mid-replay crash.
+
+A 3-replica ``PoolRouter`` fleet (``Session.serve_fleet``, rebuilds wired
+to a saved session checkpoint) replays the SAME seeded open-loop trace
+twice:
+
+  * ``baseline`` — no faults: least-loaded routing across 3 healthy
+    replicas;
+  * ``kill_pool`` — chaos kills replica 1 mid-replay
+    (``kill-pool:1:STEP``): its live tenants fail over to the survivors,
+    the pool is rebuilt from the checkpoint, and the breaker walks
+    open -> half-open (canary) -> closed while the fleet keeps serving.
+
+The headline is ``p99_degradation`` (kill-pool p99 sojourn / baseline p99
+sojourn) — the tail-latency cost of losing and recovering a third of the
+fleet — plus two booleans the chaos suite also pins: ``token_parity``
+(every completed request matches the no-failure run token-for-token) and
+``rejoined`` (the killed replica ends the replay closed).  Results merge
+into ``BENCH_serve.json`` (section ``router``).
+
+Run:  PYTHONPATH=src python -m benchmarks.router_fleet
+      PYTHONPATH=src python -m benchmarks.router_fleet --requests 120
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+ARCH = "qwen3-14b"
+REPLICAS = 3
+N_REQ = 60
+RATE_RPS = 20.0
+SLOTS = 2
+MAX_LEN = 64
+PROMPT_LEN = (4, 24)
+MAX_NEW = (1, 16)
+SEED = 42
+KILL_REPLICA = 1
+
+POOL_KW = dict(prefill_chunk=8, bucket_prompts=True, paged=True,
+               page_size=16)
+ROUTER_KW = dict(breaker_cooldown_s=0.2)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_JSON_PATH = os.path.join(_ROOT, "BENCH_serve.json")
+
+
+def _measure(session, trace, session_dir, plan=None) -> tuple[dict, list]:
+    import contextlib
+
+    from repro.pipeline import traffic
+    from repro.resilience import faults
+
+    router = session.serve_fleet(REPLICAS, slots=SLOTS, max_len=MAX_LEN,
+                                 session_dir=session_dir, router=ROUTER_KW,
+                                 **POOL_KW)
+    scope = (faults.fault_scope(plan) if plan is not None
+             else contextlib.nullcontext())
+    with scope:
+        report = traffic.replay(router, trace)
+    st = router.stats()
+    out = dict(report.summary)
+    out.update({
+        "replica_states": [r["state"] for r in st["replicas"]],
+        "fail_reasons": st["fail_reasons"],
+    })
+    tokens = [None if r["tokens"] is None else list(map(int, r["tokens"]))
+              for r in report.records]
+    return out, tokens
+
+
+def run(n_req: int = N_REQ) -> list[str]:
+    import tempfile
+
+    from repro.pipeline import traffic
+    from repro.pipeline.session import Session
+    from repro.resilience import faults
+
+    session = Session.init(ARCH)
+    # prompt ids must come from the MODEL's vocab — out-of-range ids give
+    # non-finite logits and every request quarantines
+    trace = traffic.make_trace(n_req, RATE_RPS, seed=SEED,
+                               prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+                               vocab_size=session.cfg.vocab_size)
+    # kill once a third of the trace has arrived — tenants are live
+    kill_step = max(10, n_req // 3)
+    rows: list[str] = []
+    with tempfile.TemporaryDirectory() as td:
+        base, base_toks = _measure(session, trace, os.path.join(td, "a"))
+        plan = faults.FaultPlan(kill_pool=(KILL_REPLICA, kill_step))
+        kill, kill_toks = _measure(session, trace, os.path.join(td, "b"),
+                                   plan=plan)
+    parity = base_toks == kill_toks
+    rejoined = kill["replica_states"][KILL_REPLICA] == "closed"
+    degr = (round(kill["p99_latency_s"] / base["p99_latency_s"], 2)
+            if base["p99_latency_s"] > 0 else 0.0)
+    for label, res in (("baseline", base), ("kill_pool", kill)):
+        rows.append(
+            f"router_fleet,mode={label},completed={res['completed']},"
+            f"failed={res['failed']},p50_latency_s={res['p50_latency_s']},"
+            f"p99_latency_s={res['p99_latency_s']},tok_s={res['tok_s']},"
+            f"retries={res.get('retries', 0)},trips={res.get('trips', 0)},"
+            f"rebuilds={res.get('rebuilds', 0)}")
+    rows.append(f"router_fleet,p99_degradation={degr}x,"
+                f"token_parity={parity},rejoined={rejoined}")
+
+    section = {"arch": ARCH, "replicas": REPLICAS, "requests": n_req,
+               "rate_rps": RATE_RPS, "slots": SLOTS, "max_len": MAX_LEN,
+               "seed": SEED, "kill": {"replica": KILL_REPLICA,
+                                      "step": kill_step},
+               "pool_kw": POOL_KW, "router_kw": ROUTER_KW,
+               "baseline": base, "kill_pool": kill,
+               "p99_degradation": degr, "token_parity": parity,
+               "rejoined": rejoined}
+    try:
+        with open(_JSON_PATH) as f:
+            existing = json.load(f)
+    except (OSError, ValueError):
+        existing = {}
+    existing["router"] = section
+    with open(_JSON_PATH, "w") as f:
+        json.dump(existing, f, indent=2)
+        f.write("\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=N_REQ)
+    args = ap.parse_args()
+    print("\n".join(run(args.requests)))
+
+
+if __name__ == "__main__":
+    main()

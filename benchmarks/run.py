@@ -12,7 +12,7 @@ import time
 
 def main() -> None:
     from benchmarks import (decode_attention, engine_modes, fig2_lowrank,
-                            kernel_vjp, roofline, serve_pool,
+                            kernel_vjp, roofline, router_fleet, serve_pool,
                             table1_variation, table2_complexity,
                             table3_glue_analog, table4_variants,
                             table5_last_layers, traffic_replay)
@@ -29,6 +29,7 @@ def main() -> None:
         "serve_pool": serve_pool.run,
         "decode_attn": decode_attention.run,
         "traffic": traffic_replay.run,
+        "router": router_fleet.run,
     }
     want = sys.argv[1:] or list(suites)
     for name in want:

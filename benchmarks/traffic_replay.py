@@ -65,8 +65,11 @@ def run(loads=LOADS) -> list[str]:
     by_load: dict[str, dict] = {}
     rows: list[str] = []
     for rps in loads:
+        # draw prompt ids from the MODEL's vocab: out-of-range ids produce
+        # non-finite logits, and the pool quarantines every request
         trace = traffic.make_trace(N_REQ, rps, seed=SEED,
-                                   prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+                                   prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+                                   vocab_size=session.cfg.vocab_size)
         legacy = _measure(session, trace)
         cont = _measure(session, trace, prefill_chunk=8, bucket_prompts=True)
         win = (round(legacy["p99_latency_s"] / cont["p99_latency_s"], 2)

@@ -10,6 +10,10 @@ Stable public surface
                        finetune -> squeeze -> serve -> report)
 ``ServeHandle``        bound prefill/decode serving handle (mesh-aware)
 ``ServePool``          multi-tenant batched decode scheduler
+``PoolRouter``         replicated serving fleet (``Session.serve_fleet``):
+                       least-loaded routing, retry/backoff, circuit
+                       breaking, rebuild-from-checkpoint
+``FailReason``         stable request-failure codes (router policy keys)
 ``MPOConfig``          how (and whether) matrices are MPO-factorized
 ``MPOEngine`` / ``engine_for`` / ``ExecutionPlan`` / ``choose_mode``
                        the phase-aware execution engine
@@ -49,6 +53,7 @@ import importlib
 
 __all__ = [
     "Session", "ServeHandle", "ServePool", "StageRecord", "STAGES",
+    "PoolRouter", "FailReason",
     "MPOConfig", "DENSE",
     "MPOEngine", "ExecutionPlan", "engine_for", "choose_mode",
     "ModelConfig", "ShapeConfig",
@@ -60,6 +65,8 @@ _EXPORTS = {
     "Session": "repro.pipeline",
     "ServeHandle": "repro.pipeline",
     "ServePool": "repro.pipeline",
+    "PoolRouter": "repro.pipeline",
+    "FailReason": "repro.pipeline",
     "StageRecord": "repro.pipeline",
     "STAGES": "repro.pipeline",
     "MPOConfig": "repro.core.layers",

@@ -1,9 +1,14 @@
 """Stage-based public API for the compress -> fine-tune -> squeeze -> serve
 lifecycle.  ``Session`` is the documented entry point (``from repro import
 Session``); ``ServePool`` (``Session.serve_pool``) schedules multi-tenant
-batched decode on top of it; the layer-level modules under ``repro.core`` /
-``repro.train`` remain the low-level escape hatch."""
+batched decode on top of it; ``PoolRouter`` (``Session.serve_fleet``)
+fronts N replica pools with health-checked routing, retries, circuit
+breaking and crash-recovery rebuilds; the layer-level modules under
+``repro.core`` / ``repro.train`` remain the low-level escape hatch."""
 
-from repro.pipeline.scheduler import Request, ServePool  # noqa: F401
+from repro.pipeline.clock import VirtualClock, WallClock  # noqa: F401
+from repro.pipeline.router import FleetRequest, PoolRouter  # noqa: F401
+from repro.pipeline.scheduler import (FailReason, Request,  # noqa: F401
+                                      ServePool)
 from repro.pipeline.session import (STAGES, ServeHandle,  # noqa: F401
                                     Session, StageRecord)

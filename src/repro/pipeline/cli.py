@@ -31,7 +31,11 @@ Serving-frontend subcommand (docs/serving.md "Continuous batching"):
     repro-pipeline serve-replay --requests 100 --rate 20 --chunk 8 --bucket
 
 replays a seeded open-loop Poisson trace against a ``ServePool`` and
-prints the latency/throughput summary as JSON.
+prints the latency/throughput summary as JSON.  ``--replicas N`` serves
+the trace through an N-replica ``PoolRouter`` fleet instead
+(docs/resilience.md "Fleet degradation"); combine with ``--chaos
+kill-pool:1:40`` to watch a mid-replay crash fail over, rebuild and
+rejoin.
 """
 
 from __future__ import annotations
@@ -104,28 +108,65 @@ def _replay_main(argv) -> int:
     ap.add_argument("--virtual-clock", action="store_true",
                     help="deterministic virtual time (fixed cost per pool "
                          "step) instead of wall clock")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a PoolRouter fleet of N replica "
+                         "pools (health-checked routing, retries, circuit "
+                         "breaking; docs/resilience.md)")
+    ap.add_argument("--shed-depth", type=int, default=None,
+                    help="fleet load-shedding: fail fast (status 'shed') "
+                         "past this many outstanding requests")
+    ap.add_argument("--session-dir", default=None,
+                    help="save the session here and rebuild tripped "
+                         "replicas from the checkpoint (default: rebuild "
+                         "from the live session)")
+    ap.add_argument("--chaos", action="append", default=[], metavar="SPEC",
+                    help="deterministic fault injection (repeatable), e.g. "
+                         "kill-pool:IDX:STEP, trip-pool:IDX, shed-storm:K, "
+                         "nan-decode:STEP[:SLOT]; grammar in "
+                         "resilience.faults.FaultPlan.parse")
     args = ap.parse_args(argv[1:])
 
     from repro.pipeline import traffic
+    from repro.pipeline.clock import VirtualClock, WallClock
     from repro.pipeline.session import Session
+    from repro.resilience import faults
     session = Session.init(args.arch)
-    pool = session.serve_pool(
-        args.slots, args.max_len, paged=args.paged,
-        page_size=args.page_size, prefill_chunk=args.chunk,
-        bucket_prompts=args.bucket)
+    clock = VirtualClock() if args.virtual_clock else WallClock()
+    pool_kw = dict(paged=args.paged, page_size=args.page_size,
+                   prefill_chunk=args.chunk, bucket_prompts=args.bucket)
+    if args.replicas > 1:
+        pool = session.serve_fleet(
+            args.replicas, args.slots, args.max_len, clock=clock,
+            session_dir=args.session_dir,
+            router={"shed_queue_depth": args.shed_depth}, **pool_kw)
+    else:
+        pool = session.serve_pool(args.slots, args.max_len, clock=clock,
+                                  **pool_kw)
     trace = traffic.make_trace(
         args.requests, args.rate, seed=args.seed,
         prompt_len=tuple(args.prompt_len), max_new=tuple(args.max_new),
         vocab_size=min(session.cfg.vocab_size, 1000))
-    clock = traffic.VirtualClock() if args.virtual_clock else None
-    report = traffic.replay(pool, trace, clock=clock)
+    scope = (faults.fault_scope(faults.FaultPlan.parse(args.chaos))
+             if args.chaos else contextlib.nullcontext())
+    with scope:
+        report = traffic.replay(pool, trace, clock=clock)
     stats = pool.stats()
-    print(json.dumps({"summary": report.summary,
-                      "prefill_traces": stats["prefill_traces"],
-                      "prefill_toks_s": stats["prefill_toks_s"],
-                      "decode_toks_s": stats["decode_toks_s"],
-                      "occupancy": round(stats["occupancy"], 4)},
-                     indent=2))
+    out = {"summary": report.summary}
+    if args.replicas > 1:
+        out["router"] = {
+            "replicas": [{"idx": r["idx"], "state": r["state"],
+                          "trips": r["trips"], "rebuilds": r["rebuilds"]}
+                         for r in stats["replicas"]],
+            "retries": stats["retries"], "shed": stats["shed"],
+            "trips": stats["trips"], "rebuilds": stats["rebuilds"],
+            "fail_reasons": stats["fail_reasons"],
+        }
+    else:
+        out.update(prefill_traces=stats["prefill_traces"],
+                   prefill_toks_s=stats["prefill_toks_s"],
+                   decode_toks_s=stats["decode_toks_s"],
+                   occupancy=round(stats["occupancy"], 4))
+    print(json.dumps(out, indent=2))
     return 0
 
 
@@ -209,7 +250,8 @@ def main(argv=None):
                          "crash-ckpt:mid_write[:STEP], "
                          "crash-ckpt:pre_latest[:STEP], io:SITE:N, "
                          "nan-decode:STEP[:SLOT], deny-pages:N, "
-                         "flash-raise, expire-admit:K")
+                         "flash-raise, expire-admit:K, kill-pool:IDX:STEP, "
+                         "trip-pool:IDX, shed-storm:K")
     ap.add_argument("--strict-analysis", action="store_true",
                     help="exit nonzero if the report's static-analysis "
                          "summary contains errors (repro-lint runs the full "

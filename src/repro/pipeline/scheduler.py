@@ -61,7 +61,14 @@ request fails ALONE; healthy tenants keep their slots and their tokens.
   when the Pallas call raises (``models.nn._paged_attention``).
 
 Failures are reported per-request: ``request(rid).status == "failed"`` with
-``.error``, and aggregated in ``stats()["failures"]``.
+a stable ``.error`` code (``FailReason`` — the router's retry/trip policy
+keys on it) and the human-readable ``.error_detail``, and aggregated in
+``stats()["failures"]`` (a bounded ring of recent entries; the per-reason
+counters in ``stats()["fail_reasons"]`` stay exact forever).
+
+Time comes from an injectable clock (``pipeline.clock``): deadlines,
+budgets and ``submitted_at`` all read ``clock.now()``, so tests pin expiry
+behavior on a ``VirtualClock`` instead of sleeping.
 
 Example::
 
@@ -76,12 +83,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.pipeline.clock import WallClock
 from repro.resilience import faults
 from repro.train.steps import make_serve_steps
 
@@ -91,6 +101,28 @@ from repro.train.steps import make_serve_steps
 # vlm/encdec frontends need more than a token prompt at admission.
 SUPPORTED_FAMILIES = ("dense", "moe", "ssm")
 
+# recent-failure ring size (aggregate counters stay exact past the cap)
+FAILURE_LOG_CAP = 512
+
+
+class FailReason(str, enum.Enum):
+    """Stable failure-reason codes carried in ``Request.error`` and
+    ``stats()["failures"]``.  The free-text explanation lives in
+    ``Request.error_detail`` / the failure entry's ``detail`` — policy
+    code (router retries, breaker trips, alerting) keys on THESE values,
+    never on message text.  A ``str`` mixin so existing substring checks
+    and JSON serialization keep working."""
+
+    DEADLINE = "deadline"        # per-request deadline_s expired
+    QUARANTINE = "quarantine"    # NaN/inf logits; slot quarantined
+    ADMISSION = "admission"      # page backpressure retries exhausted
+    BUDGET = "budget"            # pool run(budget_s=) exhausted
+    SHED = "shed"                # load-shed at the router front door
+    REPLICA = "replica"          # serving replica died/tripped under it
+
+    def __str__(self) -> str:    # "deadline", not "FailReason.DEADLINE"
+        return self.value
+
 
 @dataclasses.dataclass
 class Request:
@@ -99,9 +131,11 @@ class Request:
     ``tokens`` accumulates the generated ids (the first comes from the
     admission prefill, the rest from batched decode steps).  ``status``
     walks ``queued -> live -> done`` — or ``-> failed`` (NaN quarantine,
-    deadline/budget expiry, admission retry exhaustion), with the reason in
-    ``error``.  ``done`` stays the boolean "completed successfully" flag
-    (failed requests are terminal but NOT done)."""
+    deadline/budget expiry, admission retry exhaustion), with the stable
+    reason code in ``error`` (a ``FailReason``) and the human-readable
+    explanation in ``error_detail``.  ``done`` stays the boolean
+    "completed successfully" flag (failed requests are terminal but NOT
+    done)."""
 
     rid: int
     prompt: np.ndarray
@@ -111,9 +145,10 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     status: str = "queued"         # queued | live | done | failed
-    error: str | None = None
+    error: FailReason | None = None
+    error_detail: str | None = None
     slot: int | None = None
-    submitted_at: float = 0.0      # time.monotonic() at submit
+    submitted_at: float = 0.0      # pool clock.now() at submit
     admit_denials: int = 0         # backpressure retries so far
     pages_reserved: int = 0        # worst-case pages held while admitted
 
@@ -142,7 +177,8 @@ class ServePool:
                  admission_retry_limit: int = 1000,
                  guard_logits: bool = True,
                  prefill_chunk: int | None = None,
-                 bucket_prompts: bool = False, bucket_min: int = 8):
+                 bucket_prompts: bool = False, bucket_min: int = 8,
+                 clock=None):
         if model.cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"ServePool supports families {SUPPORTED_FAMILIES}; "
@@ -176,6 +212,9 @@ class ServePool:
         self.guard_logits = guard_logits
         self.prefill_chunk = prefill_chunk
         self.bucket_prompts, self.bucket_min = bucket_prompts, bucket_min
+        # all deadline/budget arithmetic reads this clock (tests pass a
+        # VirtualClock; share ONE instance with the router/replay loop)
+        self.clock = WallClock() if clock is None else clock
         # continuous admission: prompts stream through the chunked-prefill
         # step (one chunk per decode step while tenants are live)
         self._continuous = prefill_chunk is not None or bucket_prompts
@@ -260,7 +299,13 @@ class ServePool:
         self._prefill_shapes: set[int] = set()  # distinct prefill seq lengths
         self._completed = 0
         self._failed = 0
-        self._failures: list[dict] = []
+        # recent failures only (long replays must not grow without bound);
+        # _fail_reasons keeps the exact per-reason totals forever
+        self._failure_cap = int(os.environ.get("REPRO_FAILURE_LOG_CAP",
+                                               FAILURE_LOG_CAP))
+        self._failures: collections.deque[dict] = collections.deque(
+            maxlen=self._failure_cap)
+        self._fail_reasons: collections.Counter = collections.Counter()
         self._decode_seconds = 0.0
         self._admit_seconds = 0.0
 
@@ -355,18 +400,14 @@ class ServePool:
             return 0
         return -(-(prompt_len + max_new - 1) // self.page_size)
 
-    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None,
-               deadline_s: float | None = None) -> int:
-        """Enqueue one generation request; returns its request id.  The
-        prompt is a 1-D sequence of token ids; admission happens at the next
-        ``step()``/``run()`` when a slot is free.  ``deadline_s`` bounds the
-        request's total wall-clock lifetime (queue wait included): past it,
-        the request fails with whatever tokens it has.
-
-        Requests that can NEVER be served — prompt + budget over ``max_len``
-        or over the whole physical page pool — are rejected here, up front,
-        with an actionable error.  (This is also what makes head-of-line
-        admission safe: a queued request always fits EVENTUALLY.)"""
+    def validate_request(self, prompt, max_new_tokens: int,
+                         deadline_s: float | None = None) -> np.ndarray:
+        """Reject requests that can NEVER be served — prompt + budget over
+        ``max_len`` or over the whole physical page pool — up front, with an
+        actionable error; returns the normalized (1-D int32) prompt.  (This
+        is also what makes head-of-line admission safe: a queued request
+        always fits EVENTUALLY.)  Shared by ``submit`` and the fleet
+        router, which validates against pool geometry before enqueueing."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -387,11 +428,22 @@ class ServePool:
                 f"request")
         if deadline_s is not None and deadline_s <= 0:
             raise ValueError(f"deadline_s={deadline_s} must be positive")
+        return prompt
+
+    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None,
+               deadline_s: float | None = None) -> int:
+        """Enqueue one generation request; returns its request id.  The
+        prompt is a 1-D sequence of token ids; admission happens at the next
+        ``step()``/``run()`` when a slot is free.  ``deadline_s`` bounds the
+        request's total wall-clock lifetime (queue wait included): past it,
+        the request fails with whatever tokens it has.  Impossible requests
+        are rejected here (``validate_request``)."""
+        prompt = self.validate_request(prompt, max_new_tokens, deadline_s)
         rid = self._next_rid
         self._next_rid += 1
         self._requests[rid] = Request(rid, prompt, max_new_tokens, eos_id,
                                       deadline_s=deadline_s,
-                                      submitted_at=time.monotonic())
+                                      submitted_at=self.clock.now())
         self._queue.append(rid)
         return rid
 
@@ -405,15 +457,18 @@ class ServePool:
         self._release_reservation(req)
         self._completed += 1
 
-    def _fail(self, req: Request, error: str):
+    def _fail(self, req: Request, reason: FailReason, detail: str):
         """Terminal per-request failure: the pool keeps serving everyone
-        else; the partial output stays on the request."""
+        else; the partial output stays on the request.  ``reason`` is the
+        stable policy code, ``detail`` the human-readable explanation."""
         req.status = "failed"
-        req.error = error
+        req.error = reason
+        req.error_detail = detail
         self._release_reservation(req)
         self._failed += 1
+        self._fail_reasons[reason.value] += 1
         self._failures.append({"rid": req.rid, "slot": req.slot,
-                               "error": error})
+                               "reason": reason.value, "detail": detail})
 
     def _release_reservation(self, req: Request):
         self._reserved_pages -= req.pages_reserved
@@ -428,7 +483,7 @@ class ServePool:
 
     def _expired(self, req: Request) -> bool:
         return (req.deadline_s is not None
-                and time.monotonic() - req.submitted_at > req.deadline_s)
+                and self.clock.now() - req.submitted_at > req.deadline_s)
 
     def _expire(self):
         """Fail queued and live requests past their deadline."""
@@ -440,7 +495,8 @@ class ServePool:
             for rid in self._queue:
                 req = self._requests[rid]
                 if self._expired(req):
-                    self._fail(req, f"deadline ({req.deadline_s}s) expired "
+                    self._fail(req, FailReason.DEADLINE,
+                               f"deadline ({req.deadline_s}s) expired "
                                "before admission")
                 else:
                     keep.append(rid)
@@ -450,7 +506,8 @@ class ServePool:
                     continue
                 req = self._requests[rid]
                 if self._expired(req):
-                    self._fail(req, f"deadline ({req.deadline_s}s) expired "
+                    self._fail(req, FailReason.DEADLINE,
+                               f"deadline ({req.deadline_s}s) expired "
                                f"after {len(req.tokens)} tokens")
                     self._release_slot(slot)
         st = self._admit_state
@@ -458,7 +515,8 @@ class ServePool:
             # in-flight chunked admission: drop the half-built batch-1
             # cache; nothing was adopted, so the pool is untouched
             self._admit_state = None
-            self._fail(st["req"], f"deadline ({st['req'].deadline_s}s) "
+            self._fail(st["req"], FailReason.DEADLINE,
+                       f"deadline ({st['req'].deadline_s}s) "
                        "expired between prefill chunks "
                        f"({st['next']}/{len(st['pieces'])})")
 
@@ -540,7 +598,8 @@ class ServePool:
             # simply dropped — nothing was adopted, the pool page table and
             # the slot are untouched
             self._admit_state = None
-            self._fail(req, f"deadline ({req.deadline_s}s) expired between "
+            self._fail(req, FailReason.DEADLINE,
+                       f"deadline ({req.deadline_s}s) expired between "
                        f"prefill chunks ({st['next']}/{len(st['pieces'])})")
             return
         t0 = time.perf_counter()
@@ -633,7 +692,8 @@ class ServePool:
                 if self._admission_blocked(req):
                     if req.admit_denials > self.admission_retry_limit:
                         self._queue.popleft()
-                        self._fail(req, "page-pool admission denied "
+                        self._fail(req, FailReason.ADMISSION,
+                                   "page-pool admission denied "
                                    f"{req.admit_denials} times "
                                    "(admission_retry_limit="
                                    f"{self.admission_retry_limit})")
@@ -660,7 +720,8 @@ class ServePool:
                 if self._admission_blocked(req):
                     if req.admit_denials > self.admission_retry_limit:
                         self._queue.popleft()
-                        self._fail(req, "page-pool admission denied "
+                        self._fail(req, FailReason.ADMISSION,
+                                   "page-pool admission denied "
                                    f"{req.admit_denials} times "
                                    "(admission_retry_limit="
                                    f"{self.admission_retry_limit})")
@@ -690,6 +751,15 @@ class ServePool:
     def admitting(self) -> bool:
         """A chunked admission is in flight (continuous mode only)."""
         return self._admit_state is not None
+
+    @property
+    def free_pages(self) -> int | None:
+        """Unreserved KV pages (host-side reservation accounting — no
+        device sync), ``None`` for dense pools.  The router's least-loaded
+        policy reads this."""
+        if not self.paged:
+            return None
+        return self._total_pages - self._reserved_pages
 
     def step(self) -> int:
         """Expire deadline-blown requests, admit whatever fits, then run ONE
@@ -730,7 +800,8 @@ class ServePool:
             advanced += 1
             req = self._requests[rid]
             if finite is not None and not finite[slot]:
-                self._fail(req, "non-finite logits at decode step "
+                self._fail(req, FailReason.QUARANTINE,
+                           "non-finite logits at decode step "
                            f"{self._decode_steps - 1} (slot {slot} "
                            "quarantined)")
                 self._release_slot(slot)
@@ -751,32 +822,38 @@ class ServePool:
         failed).  Returns {rid: generated token ids} for ALL successfully
         finished requests; failures are on ``request(rid)`` / ``stats()``.
 
-        ``budget_s`` bounds the WHOLE drain's wall clock: past it, every
-        still-queued/live request fails with its partial output and the
-        call returns what completed in time."""
-        t0 = time.monotonic()
+        ``budget_s`` bounds the WHOLE drain's clock time (the injected
+        ``clock``: wall seconds by default, deterministic steps on a
+        ``VirtualClock``): past it, every still-queued/live request fails
+        with its partial output and the call returns what completed in
+        time."""
+        t0 = self.clock.now()
         while (self._queue or self.live > 0
                or self._admit_state is not None):
-            if budget_s is not None and time.monotonic() - t0 > budget_s:
+            if budget_s is not None and self.clock.now() - t0 > budget_s:
                 for rid in list(self._queue):
-                    self._fail(self._requests[rid],
+                    self._fail(self._requests[rid], FailReason.BUDGET,
                                f"pool wall-clock budget ({budget_s}s) "
                                "exhausted before admission")
                 self._queue.clear()
                 if self._admit_state is not None:
                     st, self._admit_state = self._admit_state, None
-                    self._fail(st["req"], "pool wall-clock budget "
+                    self._fail(st["req"], FailReason.BUDGET,
+                               "pool wall-clock budget "
                                f"({budget_s}s) exhausted between prefill "
                                f"chunks ({st['next']}/{len(st['pieces'])})")
                 for slot, rid in enumerate(self._slot_rid):
                     if rid is not None:
                         req = self._requests[rid]
-                        self._fail(req, "pool wall-clock budget "
+                        self._fail(req, FailReason.BUDGET,
+                                   "pool wall-clock budget "
                                    f"({budget_s}s) exhausted after "
                                    f"{len(req.tokens)} tokens")
                         self._release_slot(slot)
                 break
-            if (self.step() == 0 and not self._queue
+            advanced = self.step()
+            self.clock.on_step(advanced)   # no-op on WallClock
+            if (advanced == 0 and not self._queue
                     and self._admit_state is None):
                 break
         return {rid: r.output for rid, r in self._requests.items()
@@ -801,7 +878,10 @@ class ServePool:
         return {
             "page_pool": page_pool,
             "failed": self._failed,
+            # bounded ring of RECENT failures; fail_reasons stays exact
             "failures": list(self._failures),
+            "fail_reasons": dict(self._fail_reasons),
+            "failure_log_cap": self._failure_cap,
             "flash_fallbacks": DA.FALLBACKS,
             "slots": self.slots,
             "max_len": self.max_len,

@@ -518,7 +518,8 @@ class Session:
                    admission_retry_limit: int = 1000,
                    guard_logits: bool = True,
                    prefill_chunk: int | None = None,
-                   bucket_prompts: bool = False, bucket_min: int = 8):
+                   bucket_prompts: bool = False, bucket_min: int = 8,
+                   clock=None):
         """Multi-tenant batched decode over the CURRENT weights: a
         ``pipeline.scheduler.ServePool`` with ``slots`` decode rows.
         Independent requests are admitted into free slots (batch-1 prefill
@@ -542,7 +543,9 @@ class Session:
         ``prefill_chunk=N`` streams the admission prefill N tokens at a
         time, interleaved with decode, so a long prompt never stalls live
         tenants.  Both are token-identical to the default whole-prompt
-        admission.  Example::
+        admission.  ``clock=`` injects the time source the pool's
+        deadlines/budgets read (``pipeline.clock``; a shared
+        ``VirtualClock`` makes expiry tests deterministic).  Example::
 
             pool = session.serve_pool(slots=4, max_len=64)
             rids = [pool.submit(p, max_new_tokens=16) for p in prompts]
@@ -564,13 +567,61 @@ class Session:
                          guard_logits=guard_logits,
                          prefill_chunk=prefill_chunk,
                          bucket_prompts=bucket_prompts,
-                         bucket_min=bucket_min)
+                         bucket_min=bucket_min, clock=clock)
         self._pools = [r for r in self._pools if r() is not None]
         self._pools.append(weakref.ref(pool))
         self._record("serve", t0, {"pool": True, "slots": slots,
                                    "max_len": max_len,
                                    "init_seconds": pool.init_seconds})
         return pool
+
+    def serve_fleet(self, replicas: int, slots: int, max_len: int, *,
+                    session_dir: str | None = None, clock=None,
+                    router: dict | None = None, **pool_kw):
+        """A replicated serving fleet behind one ``PoolRouter``
+        (docs/resilience.md "Fleet degradation"): ``replicas`` pools over
+        the CURRENT weights, least-loaded routing, retry-on-another-replica
+        with capped backoff, per-replica circuit breaking, and queue-depth
+        load shedding — behind the same ``submit/step/run/stats`` surface
+        a single pool exposes (``traffic.replay`` drives it unchanged).
+
+        ``session_dir`` is the crash-recovery substrate: the session is
+        saved there ONCE, and a tripped/killed replica is rebuilt by
+        ``Session.restore(session_dir).serve_pool(...)`` — the restored
+        weights are token-identical, so a rebuilt replica rejoins the
+        fleet serving exactly what the others serve.  Without it, rebuilds
+        re-snapshot this live session's weights instead.
+
+        ``router`` kwargs pass through to ``PoolRouter`` (``retry_limit``,
+        ``breaker_failures``, ``breaker_cooldown_s``, ``shed_queue_depth``,
+        ...); ``pool_kw`` to every ``serve_pool`` replica.  All replicas,
+        the router, and any replay loop share ONE ``clock``.  Example::
+
+            router = session.serve_fleet(replicas=3, slots=4, max_len=64,
+                                         paged=True, pool_pages=32,
+                                         session_dir="runs/fleet")
+            outputs = router.run()
+        """
+        from repro.pipeline.clock import WallClock  # lazy
+        from repro.pipeline.router import PoolRouter  # lazy
+        if replicas < 1:
+            raise ValueError(f"replicas={replicas} must be >= 1")
+        clock = WallClock() if clock is None else clock
+        pools = [self.serve_pool(slots, max_len, clock=clock, **pool_kw)
+                 for _ in range(replicas)]
+        if session_dir is not None:
+            self.save(session_dir)
+
+            def rebuild():
+                restored = Session.restore(session_dir)
+                return restored.serve_pool(slots, max_len, clock=clock,
+                                           **pool_kw)
+        else:
+            def rebuild():
+                return self.serve_pool(slots, max_len, clock=clock,
+                                       **pool_kw)
+        return PoolRouter(pools, rebuild_fn=rebuild, clock=clock,
+                          **(router or {}))
 
     # ---- persistence ----
 

@@ -16,10 +16,15 @@ Three pieces:
 * ``replay(pool, trace, clock=...)`` — feeds the trace into the pool:
   submits every request whose arrival time has passed, runs ONE
   ``pool.step()`` per loop turn, and timestamps each request's first token
-  (TTFT) and completion.  Arrivals are never gated on completions.
-* clocks — ``WallClock`` measures real latency (benchmarks);
-  ``VirtualClock`` charges a fixed virtual cost per pool step, making the
-  whole replay deterministic for tests (no timing flake).
+  (TTFT) and completion.  Arrivals are never gated on completions.  The
+  "pool" may equally be a ``pipeline.router.PoolRouter`` fleet — it
+  exposes the same surface, and the summary then carries the fleet's
+  ``shed``/``retries``/``trips``/``rebuilds`` counters.
+* clocks — ``WallClock``/``VirtualClock`` live in ``pipeline.clock``
+  (re-exported here): wall time for real latency (benchmarks), a fixed
+  virtual cost per pool step for deterministic tests (no timing flake).
+  Pass the SAME clock instance to the pool/fleet (``serve_pool(clock=)``)
+  and to ``replay`` so deadlines and arrival times agree.
 
 Example::
 
@@ -34,9 +39,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 
 import numpy as np
+
+from repro.pipeline.clock import VirtualClock, WallClock
 
 __all__ = ["TrafficRequest", "make_trace", "replay", "ReplayReport",
            "WallClock", "VirtualClock"]
@@ -80,54 +86,15 @@ def make_trace(n: int, rate_rps: float, *, seed: int = 0,
     return out
 
 
-class WallClock:
-    """Real time, zeroed at construction — latency in actual seconds."""
-
-    def __init__(self):
-        self._t0 = time.monotonic()
-
-    def now(self) -> float:
-        return time.monotonic() - self._t0
-
-    def on_step(self, advanced: int) -> None:
-        pass                         # real time passes on its own
-
-    def advance_past(self, t: float) -> None:
-        """Idle until trace time ``t`` (pool fully drained, next arrival
-        in the future)."""
-        time.sleep(max(0.0, t - self.now()))
-
-
-class VirtualClock:
-    """Deterministic clock for tests: every pool step costs ``step_s``
-    virtual seconds, idling jumps straight to the next arrival.  Replay
-    latencies become pure functions of the schedule — no timing flake."""
-
-    def __init__(self, step_s: float = 0.01):
-        if step_s <= 0:
-            raise ValueError(f"step_s={step_s} must be positive")
-        self.step_s = step_s
-        self._t = 0.0
-
-    def now(self) -> float:
-        return self._t
-
-    def on_step(self, advanced: int) -> None:
-        self._t += self.step_s
-
-    def advance_past(self, t: float) -> None:
-        self._t = max(self._t, t)
-
-
 @dataclasses.dataclass
 class ReplayReport:
     """Per-request records + aggregate summary from one ``replay``.
 
     Each record: ``rid``, ``at_s`` (scheduled arrival), ``first_s`` /
     ``done_s`` (first-token / terminal clock timestamps, ``None`` if never
-    reached), ``status`` (``done`` | ``failed``), ``tokens`` (generated
-    ids, np.int32).  ``summary`` holds the percentiles the benchmark
-    plots."""
+    reached), ``status`` (``done`` | ``failed`` | ``shed``), ``tokens``
+    (generated ids, np.int32).  ``summary`` holds the percentiles the
+    benchmark plots."""
 
     records: list[dict]
     summary: dict
@@ -170,7 +137,7 @@ def replay(pool, trace: list[TrafficRequest], *, clock=None,
             req = pool.request(rid)
             if rec["first_s"] is None and len(req.tokens) > 0:
                 rec["first_s"] = now
-            if req.status in ("done", "failed"):
+            if req.status in ("done", "failed", "shed"):
                 rec["done_s"] = now
                 rec["status"] = req.status
                 rec["tokens"] = req.output
@@ -196,6 +163,7 @@ def replay(pool, trace: list[TrafficRequest], *, clock=None,
         "requests": len(records),
         "completed": sum(r["status"] == "done" for r in records),
         "failed": sum(r["status"] == "failed" for r in records),
+        "shed": sum(r["status"] == "shed" for r in records),
         "steps": steps,
         "makespan_s": round(makespan, 4),
         "tokens_generated": gen,
@@ -205,4 +173,8 @@ def replay(pool, trace: list[TrafficRequest], *, clock=None,
         "p50_ttft_s": round(t50, 4),
         "p99_ttft_s": round(t99, 4),
     }
+    st = pool.stats() if hasattr(pool, "stats") else {}
+    if "retries" in st:                  # a PoolRouter fleet: its counters
+        summary.update(retries=st["retries"], trips=st["trips"],
+                       rebuilds=st["rebuilds"])
     return ReplayReport(records=records, summary=summary)

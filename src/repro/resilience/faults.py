@@ -30,6 +30,14 @@ admission chunk      ``ServePool`` chunked admission — expires the
                      touching the pool page table)
 flash kernel         ``kernels.decode_attention.flash_decode_attention``
                      — raises as a failed Pallas lowering would
+``kill-pool``        ``pipeline.router.PoolRouter.step`` — replica IDX
+                     "crashes" at router step STEP: its in-flight tenants
+                     fail over, the replica is rebuilt from the session
+                     checkpoint (breaker open -> half-open -> closed)
+``trip-pool``        ``PoolRouter.step`` — force replica IDX's circuit
+                     breaker open (as a failure storm would)
+``shed-storm``       ``PoolRouter.submit`` — the next K submissions are
+                     load-shed at the front door (status ``shed``)
 ===================  =====================================================
 
 Activate a plan with ``fault_scope``::
@@ -95,7 +103,10 @@ class FaultPlan:
     crash_ckpt_step: int | None = None   # restrict to one step (else first)
     # {site: count} transient OSErrors; each check consumes one
     io_errors: dict = dataclasses.field(default_factory=dict)
-    # NaN-poison one slot's logits at one pool decode step (0-based)
+    # NaN-poison one slot's logits at one pool decode step (0-based).
+    # ONE-SHOT: consumed when it fires, so in a replicated fleet only the
+    # first pool to reach the step is poisoned — the retry on a different
+    # replica must see healthy logits.
     nan_decode_step: int | None = None
     nan_decode_slot: int = 0
     # report the page pool exhausted for the first N admission attempts
@@ -105,6 +116,13 @@ class FaultPlan:
     expire_admit_chunk: int | None = None
     # flash decode-attention raises (as a failed lowering would)
     flash_raises: bool = False
+    # ---- router-level chaos (pipeline.router.PoolRouter) ----
+    # crash replica IDX at router step STEP (one-shot): (IDX, STEP)
+    kill_pool: tuple | None = None
+    # force replica IDX's circuit breaker open (one-shot)
+    trip_pool: int | None = None
+    # load-shed the next K router submissions (consumed per submit)
+    shed_storm: int = 0
     _crashed: bool = dataclasses.field(default=False, init=False, repr=False)
 
     @classmethod
@@ -116,6 +134,8 @@ class FaultPlan:
             io:SITE:N                 nan-decode:STEP[:SLOT]
             deny-pages:N              flash-raise
             expire-admit:K
+            kill-pool:IDX:STEP        trip-pool:IDX
+            shed-storm:K
         """
         plan = cls()
         for spec in specs:
@@ -144,6 +164,12 @@ class FaultPlan:
                     plan.expire_admit_chunk = int(args[0])
                 elif name == "flash-raise":
                     plan.flash_raises = True
+                elif name == "kill-pool":
+                    plan.kill_pool = (int(args[0]), int(args[1]))
+                elif name == "trip-pool":
+                    plan.trip_pool = int(args[0])
+                elif name == "shed-storm":
+                    plan.shed_storm = int(args[0])
                 else:
                     raise ValueError(name)
             except (IndexError, ValueError):
@@ -212,10 +238,13 @@ def io_check(site: str) -> None:
 
 def corrupt_decode_logits(logits, step: int) -> np.ndarray | None:
     """Host copy of ``logits`` with the planned slot's row set to NaN when
-    this is the chosen decode step, else ``None`` (no copy, no transfer)."""
+    this is the chosen decode step, else ``None`` (no copy, no transfer).
+    One-shot: the fault is consumed when it fires, so only ONE pool in a
+    replicated fleet is poisoned (the retry replica sees healthy logits)."""
     p = _ACTIVE
     if p is None or p.nan_decode_step is None or step != p.nan_decode_step:
         return None
+    p.nan_decode_step = None        # consumed
     out = np.array(logits, np.float32)
     out[p.nan_decode_slot] = np.nan
     return out
@@ -248,3 +277,32 @@ def check_flash() -> None:
     if p is not None and p.flash_raises:
         raise InjectedKernelError(
             "injected flash decode-attention kernel failure")
+
+
+def pool_kill_due(step: int) -> int | None:
+    """Replica index to "crash" at router step ``step`` (one-shot), else
+    ``None``.  Checked at the top of ``PoolRouter.step``."""
+    p = _ACTIVE
+    if p is None or p.kill_pool is None or step != p.kill_pool[1]:
+        return None
+    idx = p.kill_pool[0]
+    p.kill_pool = None              # consumed
+    return idx
+
+
+def pool_trip_due() -> int | None:
+    """Replica index whose breaker the plan forces open (one-shot)."""
+    p = _ACTIVE
+    if p is None or p.trip_pool is None:
+        return None
+    idx, p.trip_pool = p.trip_pool, None
+    return idx
+
+
+def shed_request() -> bool:
+    """True while the plan still owes forced front-door sheds."""
+    p = _ACTIVE
+    if p is None or p.shed_storm <= 0:
+        return False
+    p.shed_storm -= 1
+    return True

@@ -26,7 +26,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro import Session
+from repro import FailReason, Session
 from repro.checkpoint.manager import CheckpointManager
 from repro.resilience import faults
 from repro.resilience.journal import SqueezeJournal
@@ -52,7 +52,8 @@ def test_fault_plan_parse():
     plan = faults.FaultPlan.parse(
         ["preempt-squeeze:2", "io:ckpt:3", "nan-decode:1:0",
          "deny-pages:2", "flash-raise", "crash-ckpt:pre_latest:5",
-         "expire-admit:2"])
+         "expire-admit:2", "kill-pool:1:40", "trip-pool:0",
+         "shed-storm:3"])
     assert plan.preempt_squeeze_iter == 2
     assert plan.io_errors == {"ckpt": 3}
     assert plan.nan_decode_step == 1 and plan.nan_decode_slot == 0
@@ -60,6 +61,9 @@ def test_fault_plan_parse():
     assert plan.flash_raises
     assert plan.crash_ckpt == "pre_latest" and plan.crash_ckpt_step == 5
     assert plan.expire_admit_chunk == 2
+    assert plan.kill_pool == (1, 40)
+    assert plan.trip_pool == 0
+    assert plan.shed_storm == 3
 
 
 @pytest.mark.parametrize("spec", ["bogus:1", "crash-ckpt:nowhere",
@@ -77,6 +81,9 @@ def test_checks_are_noops_without_plan():
     assert faults.corrupt_decode_logits(np.zeros((2, 1, 4)), 0) is None
     assert not faults.page_admission_denied()
     assert not faults.admit_chunk_expired(3)
+    assert faults.pool_kill_due(0) is None
+    assert faults.pool_trip_due() is None
+    assert not faults.shed_request()
 
 
 # --------------------------------------------------------------------------
@@ -258,7 +265,9 @@ def test_nan_quarantine_spares_healthy_slots(lm_session, fault_free):
     st = pool.stats()
     assert st["failed"] == 1 and len(st["failures"]) == 1
     bad = st["failures"][0]
-    assert bad["slot"] == 0 and "non-finite" in bad["error"]
+    assert bad["slot"] == 0 and bad["reason"] == "quarantine"
+    assert "non-finite" in bad["detail"]
+    assert st["fail_reasons"] == {"quarantine": 1}
     req = pool.request(bad["rid"])
     assert req.status == "failed" and not req.done
     # the quarantined request is NOT in run()'s output; every healthy
@@ -300,7 +309,8 @@ def test_admission_retry_limit_fails_request(lm_session):
         out = pool.run()
     assert out == {}
     req = pool.request(rid)
-    assert req.status == "failed" and "admission denied" in req.error
+    assert req.status == "failed" and req.error is FailReason.ADMISSION
+    assert "admission denied" in req.error_detail
 
 
 def test_never_fitting_request_rejected_at_submit(lm_session):
@@ -321,7 +331,7 @@ def test_deadline_expires_queued_request(lm_session):
     out = pool.run()
     assert ok in out and dead not in out
     assert pool.request(dead).status == "failed"
-    assert "deadline" in pool.request(dead).error
+    assert pool.request(dead).error is FailReason.DEADLINE
 
 
 def test_wall_clock_budget_fails_leftovers(lm_session):
@@ -331,7 +341,7 @@ def test_wall_clock_budget_fails_leftovers(lm_session):
     out = pool.run(budget_s=0.0)
     assert out == {}
     assert pool.stats()["failed"] == len(rids)
-    assert all("budget" in f["error"] for f in pool.stats()["failures"])
+    assert all(f["reason"] == "budget" for f in pool.stats()["failures"])
 
 
 def test_expire_admit_chunk_drops_admission_cleanly(lm_session, fault_free):
@@ -346,7 +356,8 @@ def test_expire_admit_chunk_drops_admission_cleanly(lm_session, fault_free):
         rids = [pool.submit(p, 6) for p in PROMPTS]
         out = pool.run()
     req = pool.request(victim)
-    assert req.status == "failed" and "prefill chunks" in req.error
+    assert req.status == "failed" and req.error is FailReason.DEADLINE
+    assert "prefill chunks" in req.error_detail
     assert victim not in out and req.tokens == []
     ff = [fault_free[r] for r in sorted(fault_free)]
     for rid, want in zip(rids, ff):
@@ -378,7 +389,7 @@ def test_nan_quarantine_during_chunked_admission(lm_session, fault_free):
         other = pool.submit(PROMPTS[1], 6)
         out = pool.run()
     assert pool.request(bad).status == "failed"
-    assert "non-finite" in pool.request(bad).error
+    assert "non-finite" in pool.request(bad).error_detail
     assert (out[longr] == long_want).all()
     assert (out[other] == ff[1]).all()
     st = pool.stats()
@@ -504,3 +515,195 @@ def test_cli_chaos_crash_exit_code(tmp_path):
                    "--ckpt-dir", str(tmp_path / "ck"),
                    "--chaos", "crash-ckpt:pre_latest"])
     assert rc == 4
+
+
+# --------------------------------------------------------------------------
+# PoolRouter fleet degradation (tentpole: replicated serving fleet)
+# --------------------------------------------------------------------------
+
+
+ROUTER_KW = dict(breaker_cooldown_s=0.05, backoff_base_s=0.01)
+
+
+def test_fleet_kill_pool_mid_replay_rebuilds_and_matches(
+        lm_session, fault_free, tmp_path):
+    """The acceptance scenario: 3 replicas, a deterministic mid-replay
+    kill of replica 1 WHILE it serves live tenants.  Every request still
+    completes with tokens identical to the no-failure serial reference,
+    and the killed replica is rebuilt from the session checkpoint and
+    rejoins (breaker closed) before the replay ends."""
+    from repro.pipeline import traffic
+    ff = [fault_free[r] for r in sorted(fault_free)]
+    clock = traffic.VirtualClock(step_s=0.01)
+    with faults.fault_scope(faults.FaultPlan(kill_pool=(1, 4))):
+        router = lm_session.serve_fleet(
+            3, session_dir=str(tmp_path / "fleet"), clock=clock,
+            router=ROUTER_KW, **POOL_KW)
+        trace = [traffic.TrafficRequest(i * 0.005, p, 6)
+                 for i, p in enumerate(PROMPTS * 3)]
+        report = traffic.replay(router, trace, clock=clock, max_steps=4000)
+    assert report.summary["completed"] == len(trace)
+    assert report.summary["failed"] == 0 and report.summary["shed"] == 0
+    st = router.stats()
+    assert st["trips"] == 1 and st["rebuilds"] == 1
+    assert st["replicas"][1]["trips"] == 1
+    assert [r["state"] for r in st["replicas"]] == ["closed"] * 3
+    # the fleet's counters ride along in the replay summary
+    assert report.summary["trips"] == 1 and report.summary["rebuilds"] == 1
+    # token parity: each record matches the serial fault-free reference
+    for i, rec in enumerate(report.records):
+        assert (np.asarray(rec["tokens"]) == ff[i % 3]).all()
+    # failovers were recorded as REPLICA attempts, not budgeted retries
+    rerouted = [router.request(r["rid"]) for r in report.records
+                if router.request(r["rid"]).attempts]
+    assert rerouted, "the kill hit live tenants"
+    for req in rerouted:
+        assert all(a["reason"] == "replica" for a in req.attempts)
+
+
+def test_fleet_trip_breaker_canary_recovery(lm_session, fault_free):
+    """trip-pool chaos: replica 0's breaker opens, its tenants fail over,
+    the pool is rebuilt, and after the cooldown a canary probe walks the
+    breaker half-open -> closed.  All requests complete token-identically."""
+    from repro.pipeline.clock import VirtualClock
+    ff = [fault_free[r] for r in sorted(fault_free)]
+    clock = VirtualClock(step_s=0.01)
+    with faults.fault_scope(faults.FaultPlan(trip_pool=0)):
+        router = lm_session.serve_fleet(2, clock=clock, router=ROUTER_KW,
+                                        **POOL_KW)
+        rids = [router.submit(p, 6) for p in PROMPTS * 2]
+        out = router.run(max_steps=4000)
+    st = router.stats()
+    assert st["completed"] == len(rids) and st["failed"] == 0
+    assert st["trips"] == 1 and st["rebuilds"] == 1
+    assert st["replicas"][0]["state"] == "closed"     # canary passed
+    for i, rid in enumerate(rids):
+        assert (out[rid] == ff[i % 3]).all()
+
+
+def test_fleet_nan_quarantine_retries_on_other_replica(
+        lm_session, fault_free):
+    """A quarantined request is NOT terminal for the fleet: the router
+    re-submits it to the other replica, where greedy decode regenerates
+    the identical tokens (nan-decode chaos is one-shot)."""
+    ff = [fault_free[r] for r in sorted(fault_free)]
+    with faults.fault_scope(faults.FaultPlan(nan_decode_step=1,
+                                             nan_decode_slot=0)):
+        router = lm_session.serve_fleet(2, router=ROUTER_KW, **POOL_KW)
+        rids = [router.submit(p, 6) for p in PROMPTS]
+        out = router.run(max_steps=4000)
+    st = router.stats()
+    assert st["completed"] == len(rids) and st["failed"] == 0
+    assert st["retries"] >= 1
+    retried = [router.request(r) for r in rids if router.request(r).retries]
+    assert retried and all(
+        a["reason"] == "quarantine" for q in retried for a in q.attempts)
+    for i, rid in enumerate(rids):
+        assert (out[rid] == ff[i % 3]).all()
+
+
+def test_fleet_retry_exhaustion_surfaces_last_failreason(lm_session):
+    """Every replica denies admission: after retry_limit budgeted retries
+    the request fails with the LAST FailReason and its attempt history."""
+    with faults.fault_scope(faults.FaultPlan(deny_page_admissions=10 ** 6)):
+        router = lm_session.serve_fleet(
+            2, router=dict(retry_limit=1, backoff_base_s=0.0),
+            admission_retry_limit=2, **POOL_KW)
+        rid = router.submit(PROMPTS[0], 6)
+        out = router.run(max_steps=4000)
+    assert out == {}
+    req = router.request(rid)
+    assert req.status == "failed" and req.error is FailReason.ADMISSION
+    assert "admission denied" in req.error_detail
+    assert req.retries == 1
+    assert [a["reason"] for a in req.attempts] == ["admission"]
+    assert router.stats()["fail_reasons"] == {"admission": 1}
+
+
+def test_fleet_shed_never_touches_pools(lm_session, fault_free):
+    """Load shedding is a front-door decision: shed-storm chaos sheds the
+    first two submissions, then shed_queue_depth sheds everything past 3
+    outstanding.  Shed requests never reach a pool — no slot, no pages —
+    and the admitted ones still complete token-identically."""
+    ff = [fault_free[r] for r in sorted(fault_free)]
+    with faults.fault_scope(faults.FaultPlan(shed_storm=2)):
+        router = lm_session.serve_fleet(
+            2, router=dict(shed_queue_depth=3, **ROUTER_KW), **POOL_KW)
+        rids = [router.submit(p, 6) for p in (PROMPTS * 3)[:8]]
+        out = router.run(max_steps=4000)
+    st = router.stats()
+    assert st["shed"] == 5 and st["completed"] == 3 and st["failed"] == 0
+    assert st["fail_reasons"] == {"shed": 5}
+    shed = [r for r in rids if router.request(r).status == "shed"]
+    assert len(shed) == 5 and rids[0] in shed and rids[1] in shed
+    for r in shed:
+        req = router.request(r)
+        assert req.error is FailReason.SHED and req.tokens == []
+        assert r not in out
+    # the pools only ever saw the 3 admitted requests, and leaked nothing
+    pools = [rep["pool"] for rep in st["replicas"]]
+    assert sum(p["submitted"] for p in pools) == 3
+    for p in pools:
+        assert p["page_pool"]["used"] == 0
+        assert p["page_pool"]["reserved"] == 0
+    served = [r for r in rids if r in out]
+    for rid in served:
+        i = rids.index(rid)
+        assert (out[rid] == ff[i % 3]).all()
+
+
+def test_fleet_dead_without_rebuild_fn(lm_session):
+    """A killed replica with no rebuild_fn goes permanently dead; a
+    single-replica fleet then fails its open requests with REPLICA."""
+    from repro.pipeline.router import PoolRouter
+    pool = lm_session.serve_pool(**POOL_KW)
+    with faults.fault_scope(faults.FaultPlan(kill_pool=(0, 0))):
+        router = PoolRouter([pool], rebuild_fn=None)
+        rid = router.submit(PROMPTS[0], 6)
+        out = router.run(max_steps=100)
+    assert out == {}
+    req = router.request(rid)
+    assert req.status == "failed" and req.error is FailReason.REPLICA
+    st = router.stats()
+    assert st["replicas"][0]["state"] == "dead"
+    assert st["replicas"][0]["pool"] is None and st["rebuilds"] == 0
+
+
+# --------------------------------------------------------------------------
+# deterministic clocks + failure ring (satellites)
+# --------------------------------------------------------------------------
+
+
+def test_virtual_clock_deadline_is_deterministic(lm_session):
+    """With an injected VirtualClock the queued-deadline expiry is exact —
+    no timing flake — and the failure ring entry carries the stable
+    reason code plus the human detail."""
+    from repro.pipeline.clock import VirtualClock
+    clock = VirtualClock(step_s=1.0)
+    pool = lm_session.serve_pool(slots=1, max_len=32, paged=True,
+                                 page_size=8, clock=clock)
+    ok = pool.submit(PROMPTS[0], 4)
+    dead = pool.submit(PROMPTS[1], 4, deadline_s=2.5)
+    out = pool.run()
+    assert ok in out and dead not in out
+    req = pool.request(dead)
+    assert req.error is FailReason.DEADLINE
+    entry = pool.stats()["failures"][0]
+    assert entry == {"rid": dead, "slot": None, "reason": "deadline",
+                     "detail": "deadline (2.5s) expired before admission"}
+
+
+def test_failure_ring_cap_env_override(lm_session, monkeypatch):
+    """REPRO_FAILURE_LOG_CAP bounds the failure ring; the per-reason
+    counters in fail_reasons stay exact past the cap."""
+    monkeypatch.setenv("REPRO_FAILURE_LOG_CAP", "2")
+    pool = lm_session.serve_pool(slots=1, max_len=32, paged=True,
+                                 page_size=8)
+    rids = [pool.submit(p, 6) for p in PROMPTS]
+    out = pool.run(budget_s=0.0)
+    st = pool.stats()
+    assert out == {} and st["failed"] == len(rids)
+    assert st["failure_log_cap"] == 2
+    assert len(st["failures"]) == 2                 # ring kept the cap
+    assert all(f["reason"] == "budget" for f in st["failures"])
+    assert st["fail_reasons"] == {"budget": 3}      # counters stay exact

@@ -150,6 +150,45 @@ def test_traffic_stress_parity_and_page_accounting(kw):
     assert st["decode_tokens"] == st["tokens_generated"] - N_PER_CASE
 
 
+def test_fleet_traffic_stress_kill_pool_parity(tmp_path):
+    """Fleet-scale stress (the CI traffic-stress job's "fleet" step): a
+    3-replica router serves N_PER_CASE open-loop arrivals on the full
+    continuous-admission config while chaos kills replica 1 mid-replay.
+    Every request still completes token-equal to serial (failovers and
+    rebuild included), the killed replica rejoins closed, and no replica
+    leaks a page."""
+    from repro.resilience import faults
+    session = _get_session()
+    rng = np.random.default_rng(20260808)
+    trace = _combo_trace(N_PER_CASE, rate_rps=200.0, rng=rng)
+    kill_step = max(10, N_PER_CASE // 6)    # mid-replay, tenants live
+    with faults.fault_scope(faults.FaultPlan(kill_pool=(1, kill_step))):
+        router = session.serve_fleet(
+            3, slots=2, max_len=MAX_LEN, prefill_chunk=4,
+            bucket_prompts=True, paged=True, page_size=8,
+            session_dir=str(tmp_path / "fleet"),
+            router=dict(breaker_cooldown_s=0.05))
+        report = traffic.replay(router, trace,
+                                clock=traffic.VirtualClock(step_s=0.005),
+                                max_steps=400 * N_PER_CASE)
+    assert report.summary["completed"] == N_PER_CASE
+    assert report.summary["failed"] == 0 and report.summary["shed"] == 0
+    for req, rec in zip(trace, report.records):
+        want = _expected(req.prompt.size, req.max_new_tokens, req.eos_id)
+        np.testing.assert_array_equal(
+            rec["tokens"], want,
+            err_msg=f"rid {rec['rid']} (plen={req.prompt.size}, "
+                    f"budget={req.max_new_tokens}, eos={req.eos_id})")
+    st = router.stats()
+    assert st["trips"] == 1 and st["rebuilds"] == 1
+    assert [r["state"] for r in st["replicas"]] == ["closed"] * 3
+    assert st["outstanding"] == 0 and st["backlog"] == 0
+    for rep in st["replicas"]:
+        pp = rep["pool"]["page_pool"]
+        assert pp["used"] == 0, f"replica {rep['idx']} leaked pages"
+        assert pp["reserved"] == 0, f"replica {rep['idx']} leaked reservations"
+
+
 @settings(max_examples=4, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_replay_property_randomized_seeds(seed):
